@@ -1,0 +1,86 @@
+"""Shared benchmark utilities: a briefly-trained ESSR supernet (cached on
+disk so the table benches don't retrain), synthetic eval sets, timers."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.pipeline import edge_selective_sr
+from repro.data.synthetic import degrade, patch_batches, random_image
+from repro.models.essr import ESSRConfig, essr_forward, init_essr
+from repro.train import optimizer as O
+from repro.train.losses import psnr_y, ssim
+from repro.train.trainer import train_essr_supernet
+
+CACHE = os.environ.get("BENCH_CACHE", "/root/repo/results/bench_models")
+BENCH_STEPS = int(os.environ.get("BENCH_STEPS", "6000"))
+
+
+def get_trained_essr(scale: int = 4, n_sfb: int = 5, steps: Optional[int] = None,
+                     tag: str = "") -> Tuple[dict, ESSRConfig]:
+    """Train (once, cached on disk) a reduced-schedule ESSR supernet on the
+    synthetic dataset. The paper's recipe scaled down: Lamb, cosine 3e-3,
+    MACs-proportional subnet sampling. RAW weights are benchmarked (EMA 0.999
+    is still init-biased at bench-scale step counts)."""
+    steps = steps or (BENCH_STEPS if n_sfb == 5 else 1500)
+    cfg = ESSRConfig(scale=scale, n_sfb=n_sfb)
+    name = f"essr_x{scale}_sfb{n_sfb}_{steps}{tag}"
+    cm = CheckpointManager(os.path.join(CACHE, name), keep=1)
+    params = init_essr(jax.random.PRNGKey(0), cfg)
+    if cm.latest_step() is not None:
+        restored, _ = cm.restore({"params": params})
+        return restored["params"], cfg
+    data = patch_batches(0, batch=16, lr_patch=16, scale=scale, pool=16,
+                         pool_hw=64 * scale)
+    params, _, _ = train_essr_supernet(
+        params, cfg, data, steps=steps,
+        opt=O.lamb(O.cosine_decay(3e-3, steps, warmup=100)), log_every=0)
+    cm.save(steps, {"params": params}, blocking=True)
+    return params, cfg
+
+
+def eval_frames(n: int = 3, hw: int = 96, scale: int = 4, seed: int = 777):
+    """Held-out synthetic (lr, hr) frame pairs.
+
+    Content tiles are sized to one LR patch's HR footprint (32*scale) so a
+    32x32 LR patch sees ONE content class — the regime the edge router
+    discriminates (tiles smaller than a patch make every patch mixed-class
+    and score high, collapsing the routing distribution)."""
+    out = []
+    for i in range(n):
+        hr = jnp.asarray(random_image(seed + i, hw * scale, hw * scale,
+                                      tile=32 * scale))
+        out.append((degrade(hr, scale), hr))
+    return out
+
+
+def mean_psnr_edge_selective(params, cfg, frames, t1=8.0, t2=40.0,
+                             patch=32, overlap=2) -> Tuple[float, float]:
+    """(mean PSNR_Y, mean MAC saving) of the edge-selective pipeline."""
+    ps, sv = [], []
+    for lr, hr in frames:
+        res = edge_selective_sr(params, lr, cfg, t1=t1, t2=t2,
+                                patch=patch, overlap=overlap)
+        ps.append(float(psnr_y(res.image, hr)))
+        sv.append(res.mac_saving)
+    return float(np.mean(ps)), float(np.mean(sv))
+
+
+def timed(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """us per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,27 @@
+"""Paper Table X: PSNR at fixed MAC-reduction operating points (40/50/60%),
+thresholds found by the same grid search a deployment would run."""
+import numpy as np
+
+from benchmarks.common import emit, eval_frames, get_trained_essr, \
+    mean_psnr_edge_selective
+from repro.core.edge_score import edge_score
+from repro.core.patching import extract_patches
+from repro.core.subnet_policy import thresholds_for_target_saving
+
+
+def main():
+    params, cfg = get_trained_essr(scale=4)
+    frames = eval_frames(n=3, hw=96)
+    scores = np.concatenate([
+        np.asarray(edge_score(extract_patches(lr, 32, 2)[0])) for lr, _ in frames])
+    base, _ = mean_psnr_edge_selective(params, cfg, frames, t1=0, t2=0)
+    for target in (0.4, 0.5, 0.6):
+        t1, t2 = thresholds_for_target_saving(scores, target, cfg)
+        p, s = mean_psnr_edge_selective(params, cfg, frames, t1=t1, t2=t2)
+        emit(f"table10_saving{int(target*100)}", 0.0,
+             f"t1={t1};t2={t2};mac_saving={s:.3f};psnr_y={p:.3f};"
+             f"drop={base - p:.3f}")
+
+
+if __name__ == "__main__":
+    main()

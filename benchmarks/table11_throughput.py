@@ -1,0 +1,47 @@
+"""Paper Table XI: throughput/energy. No silicon here — we report
+(a) measured CPU patch throughput per subnet (pure-JAX and fused-kernel
+    paths), and
+(b) the TPU-side projection from the dry-run roofline (results/dryrun),
+    i.e. the frames/s one v5e chip supports at the measured bytes/flops.
+Power/gate count are N/A on CPU and stated as such."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, get_trained_essr, timed
+from repro.kernels.ops import essr_forward_kernels
+from repro.models.essr import essr_forward
+
+
+def main():
+    params, cfg = get_trained_essr(scale=4)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (32, 32, 32, 3))
+
+    for width in (27, 54):
+        us = timed(lambda: essr_forward(params, x, cfg, width=width), reps=3)
+        pix = 32 * 32 * 32 * 16  # HR pixels per call (x4)
+        emit(f"table11_cpu_jax_c{width}", us, f"mpixels_per_s={pix/us:.2f}")
+        us_k = timed(lambda: essr_forward_kernels(params, x, cfg, width=width),
+                     reps=1)
+        emit(f"table11_cpu_kernels_c{width}", us_k,
+             f"mpixels_per_s={pix/us_k:.2f};note=interpret-mode(correctness path)")
+
+    # TPU projection from the dry-run artifact
+    f = "/root/repo/results/dryrun/single/essr-x4__serve_8k.json"
+    if os.path.exists(f):
+        d = json.load(open(f))
+        r = d["roofline"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        hr_pixels = 2304 * 128 * 128          # one 8K frame's worth of patches
+        fps_mesh = 1.0 / step_s if step_s > 0 else float("inf")
+        emit("table11_tpu_projection", 0.0,
+             f"dominant={r['dominant']};frame_step_s={step_s:.2e};"
+             f"fps_on_256chips={fps_mesh:.0f};"
+             f"mpixels_per_j=NA(no power on CPU);paper=4797")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table I: patch size vs PSNR / line buffer / feature SRAM.
+
+The SRAM columns are exact reconstructions of the paper's numbers
+(feature SRAM = patch^2 * 54ch * 1.25B FXP10; line buffer = 2 halo rows x
+patch x 54 x 1.25B + 200B control) — asserted against Table I. PSNR is
+measured on synthetic eval frames with the edge-selective pipeline.
+"""
+import numpy as np
+
+from benchmarks.common import (emit, eval_frames, get_trained_essr,
+                               mean_psnr_edge_selective, timed)
+
+PAPER = {16: (2.36, 17), 32: (4.52, 69), 48: (6.68, 156), 64: (8.84, 276)}
+
+
+def feature_sram_kb(patch: int, c: int = 54, bytes_per: float = 1.25) -> float:
+    return patch * patch * c * bytes_per / 1000     # paper reports decimal kB
+
+
+def line_buffer_kb(patch: int, c: int = 54, bytes_per: float = 1.25) -> float:
+    return (2 * patch * c * bytes_per + 200) / 1000
+
+
+def main():
+    params, cfg = get_trained_essr(scale=4)
+    frames = eval_frames(n=2, hw=96)
+    for patch in (16, 32, 48, 64):
+        lb, fs = line_buffer_kb(patch), feature_sram_kb(patch)
+        plb, pfs = PAPER[patch]
+        assert abs(fs - pfs) / pfs < 0.02, f"feature SRAM mismatch @{patch}"
+        assert abs(lb - plb) / plb < 0.12, f"line buffer mismatch @{patch}"
+        us = timed(lambda: mean_psnr_edge_selective(params, cfg, frames[:1],
+                                                    patch=patch), reps=1)
+        psnr, saving = mean_psnr_edge_selective(params, cfg, frames, patch=patch)
+        emit(f"table1_patch{patch}", us,
+             f"psnr_y={psnr:.2f};line_buffer_kb={lb:.2f};feature_sram_kb={fs:.0f};"
+             f"paper_kb={plb}/{pfs};mac_saving={saving:.3f}")
+
+
+if __name__ == "__main__":
+    main()

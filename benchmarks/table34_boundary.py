@@ -1,0 +1,66 @@
+"""Paper Tables III + IV: boundary-processing strategies and overlap width.
+
+Strategies measured on synthetic eval frames with the trained supernet:
+  whole      — whole-frame convolution (the lossless software reference;
+               == SRAM/DRAM+recompute quality at unbounded cost)
+  interp     — non-overlapped patches, naive stitch (cheap floor)
+  overlap+avg— the paper's pick (2-px LR overlap -> 8-px HR at x4)
+
+Derived columns reconstruct the paper's cost model: boundary SRAM for
+overlap o (HR px) ~ o/8 * 114KB; MACs multiplier = (32/(32-o_lr))^2.
+"""
+import numpy as np
+
+from benchmarks.common import emit, eval_frames, get_trained_essr
+from repro.core.patching import extract_patches, fuse_patches_average, \
+    fuse_patches_crop, overlap_mac_overhead
+from repro.core.pipeline import edge_selective_sr, sr_whole
+from repro.train.losses import psnr_y
+
+PAPER_T4 = {16: (243, 1.31), 12: (176, 1.22), 8: (114, 1.14),
+            4: (55, 1.07), 0: (0, 1.00)}
+
+
+def _psnr_for_overlap(params, cfg, frames, overlap_lr, average=True):
+    ps = []
+    for lr, hr in frames:
+        if overlap_lr < 0:                       # whole-frame reference
+            sr = sr_whole(params, lr, cfg)
+        else:
+            patches, pos = extract_patches(lr, 32, overlap_lr)
+            from repro.models.essr import essr_forward
+            srp = essr_forward(params, patches, cfg)
+            fuse = fuse_patches_average if average else fuse_patches_crop
+            sr = fuse(srp, pos, cfg.scale, (hr.shape[0], hr.shape[1]))
+        ps.append(float(psnr_y(sr, hr)))
+    return float(np.mean(ps))
+
+
+def main():
+    params, cfg = get_trained_essr(scale=4)
+    frames = eval_frames(n=2, hw=96)
+
+    whole = _psnr_for_overlap(params, cfg, frames, -1)
+    emit("table3_whole_reference", 0.0, f"psnr_y={whole:.3f};paper_row=SRAM+Recomp")
+    naive = _psnr_for_overlap(params, cfg, frames, 0, average=False)
+    emit("table3_interpolation", 0.0,
+         f"psnr_y={naive:.3f};drop_vs_whole={whole-naive:.3f};paper_row=Interpol")
+    oavg = _psnr_for_overlap(params, cfg, frames, 2, average=True)
+    emit("table3_overlap_avg", 0.0,
+         f"psnr_y={oavg:.3f};drop_vs_whole={whole-oavg:.3f};boundary_sram_kb=114;"
+         f"paper_drop=0.05")
+
+    # Table IV sweep: overlap in HR pixels (LR overlap * scale)
+    for olr in (4, 3, 2, 1, 0):
+        ohr = olr * cfg.scale
+        sram = 114 * ohr / 8.0
+        macs = overlap_mac_overhead(32, olr)
+        p = _psnr_for_overlap(params, cfg, frames, olr, average=olr > 0)
+        paper = PAPER_T4.get(ohr, (None, None))
+        emit(f"table4_overlap{ohr}px", 0.0,
+             f"psnr_y={p:.3f};macs_x={macs:.2f};boundary_sram_kb={sram:.0f};"
+             f"paper_sram={paper[0]};paper_macs={paper[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Tables V/VI (+ Fig. 18): size/MACs/quality landscape.
+
+Exact param+MAC identities vs the paper for ESSR, pruned RLFN, FSRCNN;
+PSNR/SSIM measured on synthetic eval (absolute values differ from Set5 by
+dataset, orderings are the claim under test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_frames, get_trained_essr
+from repro.models.essr import ESSR_X2, ESSR_X4, essr_forward, essr_macs, \
+    essr_param_count
+from repro.models.layers import bicubic_resize, bilinear_resize, count_params
+from repro.models.rlfn import RLFN_PRUNED_X4, init_rlfn, rlfn_forward, \
+    rlfn_macs_per_lr_pixel
+from repro.train.losses import psnr_y, ssim
+
+
+def main():
+    frames = eval_frames(n=3, hw=64)
+    scale = 4
+
+    # exact identities (Tables V/VI)
+    assert essr_param_count(ESSR_X2) == 51_906            # "51K"
+    assert essr_param_count(ESSR_X4) == 53_886            # "53K"
+    assert abs(essr_macs(ESSR_X2, (540, 960)) / 1e9 - 26.1) < 0.3   # "26G"
+    assert abs(essr_macs(ESSR_X4, (270, 480)) / 1e9 - 6.8) < 0.2    # "7G"
+    rlfn_p = count_params(init_rlfn(jax.random.PRNGKey(0), RLFN_PRUNED_X4))
+    reduction_p = 1 - essr_param_count(ESSR_X4) / rlfn_p
+    reduction_m = 1 - (essr_macs(ESSR_X4, (100, 100)) /
+                       (rlfn_macs_per_lr_pixel(RLFN_PRUNED_X4) * 100 * 100))
+    emit("table56_identities", 0.0,
+         f"essr_x2=51906;essr_x4=53886;rlfn_pruned={rlfn_p};"
+         f"param_reduction={reduction_p:.3f}(paper 0.84);"
+         f"mac_reduction={reduction_m:.3f}(paper 0.83)")
+
+    # quality ladder on synthetic eval
+    params, cfg = get_trained_essr(scale=scale)
+    rows = {}
+    for name, fn in [
+        ("bilinear", lambda lr: bilinear_resize(lr[None], scale)[0]),
+        ("bicubic", lambda lr: bicubic_resize(lr[None], (lr.shape[0] * scale,
+                                                         lr.shape[1] * scale))[0]),
+        ("essr_c27", lambda lr: essr_forward(params, lr[None], cfg, width=27)[0]),
+        ("essr_c54", lambda lr: essr_forward(params, lr[None], cfg, width=54)[0]),
+    ]:
+        ps = [float(psnr_y(fn(lr), hr)) for lr, hr in frames]
+        ss = [float(ssim(fn(lr), hr)) for lr, hr in frames]
+        rows[name] = (np.mean(ps), np.mean(ss))
+        emit(f"table56_{name}", 0.0, f"psnr_y={np.mean(ps):.2f};ssim={np.mean(ss):.3f}")
+
+    # the orderings the paper's tables assert
+    assert rows["essr_c54"][0] >= rows["essr_c27"][0] - 0.3, "C54 must be >= C27"
+    emit("table56_ordering", 0.0,
+         f"c54_minus_c27={rows['essr_c54'][0]-rows['essr_c27'][0]:.2f};"
+         f"c54_minus_bilinear={rows['essr_c54'][0]-rows['bilinear'][0]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

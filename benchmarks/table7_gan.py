@@ -1,0 +1,54 @@
+"""Paper Table VII / Fig. 23 analog: perceptual-oriented (GAN) phase.
+
+Loads the trained PSNR model, runs a short perceptual phase (L1 + LDL
+artifact + perceptual + adversarial at the paper's 0.01/1/1/0.005 weights,
+Adam 1e-4), and reports the PSNR-vs-perceptual trade: the GAN model should
+lower the perceptual distance (LPIPS stand-in) while giving up a little
+PSNR — the direction Table VII documents for ESSR-GAN."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_frames, get_trained_essr
+from repro.train.gan import train_essr_gan
+from repro.data.synthetic import patch_batches
+from repro.models.essr import essr_forward
+from repro.train.losses import init_feature_net, perceptual_loss, psnr_y, ssim
+
+GAN_STEPS = int(os.environ.get("BENCH_GAN_STEPS", "60"))
+
+
+def _metrics(params, cfg, frames, feat):
+    ps, ss, lp = [], [], []
+    for lr, hr in frames:
+        sr = jnp.clip(essr_forward(params, lr[None], cfg)[0], 0, 1)
+        ps.append(float(psnr_y(sr, hr)))
+        ss.append(float(ssim(sr, hr)))
+        lp.append(float(perceptual_loss(feat, sr[None], hr[None])))
+    return float(np.mean(ps)), float(np.mean(ss)), float(np.mean(lp))
+
+
+def main():
+    params, cfg = get_trained_essr(scale=4)
+    frames = eval_frames(n=2, hw=64)
+    feat = init_feature_net(jax.random.PRNGKey(7))
+
+    p0, s0, l0 = _metrics(params, cfg, frames, feat)
+    emit("table7_psnr_model", 0.0, f"psnr_y={p0:.2f};ssim={s0:.3f};lpips_proxy={l0:.4f}")
+
+    data = patch_batches(1, batch=4, lr_patch=16, scale=4, pool=8, pool_hw=128)
+    gan_params, _, hist = train_essr_gan(params, cfg, data, steps=GAN_STEPS,
+                                         log_every=0)
+    p1, s1, l1 = _metrics(gan_params, cfg, frames, feat)
+    emit("table7_gan_model", 0.0,
+         f"psnr_y={p1:.2f};ssim={s1:.3f};lpips_proxy={l1:.4f};"
+         f"g_loss={hist[0][0]:.3f}->{hist[-1][0]:.3f};gan_steps={GAN_STEPS}")
+    emit("table7_trade", 0.0,
+         f"d_psnr={p1-p0:+.2f};d_lpips_proxy={l1-l0:+.4f};"
+         f"paper_direction=lpips_down_psnr_flat_or_down")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""GLNPU group-of-layer fusion: feature-traffic accounting (paper claims
+43% feature-SRAM-access saving for BSConv fusion, 79% for whole-SFB fusion).
+
+On TPU the saving is HBM round-trips: layer-by-layer = every intermediate
+written+read; fused kernel = input read + output written, intermediates in
+VMEM. Exact byte accounting below (weights counted in both)."""
+from benchmarks.common import emit
+
+BYTES = 1.25          # FXP10, matching the paper's SRAM numbers
+PIX = 32 * 32
+C = 54
+
+
+def traffic_layer_by_layer_bsconv(cin, cout):
+    # pw: r in + w mid ; dw: r mid + w out
+    return BYTES * PIX * ((cin + cout) + (cout + cout))
+
+
+def traffic_fused_bsconv(cin, cout):
+    return BYTES * PIX * (cin + cout)
+
+
+def traffic_layer_by_layer_sfb():
+    t = traffic_layer_by_layer_bsconv(C, C) * 2           # two BSConvs
+    t += BYTES * PIX * (C + C + C)                        # shortcut add r2 w1
+    t += BYTES * PIX * (C + C)                            # fuse 1x1
+    return t
+
+
+def traffic_fused_sfb():
+    return BYTES * PIX * (C + C)                          # read x, write out
+
+
+def main():
+    lb = traffic_layer_by_layer_bsconv(C, C)
+    f = traffic_fused_bsconv(C, C)
+    emit("fusion_bsconv", 0.0,
+         f"layer_by_layer_kb={lb/1024:.1f};fused_kb={f/1024:.1f};"
+         f"saving={1-f/lb:.3f};paper=0.43")
+    lbs, fs = traffic_layer_by_layer_sfb(), traffic_fused_sfb()
+    emit("fusion_sfb", 0.0,
+         f"layer_by_layer_kb={lbs/1024:.1f};fused_kb={fs/1024:.1f};"
+         f"saving={1-fs/lbs:.3f};paper=0.79")
+
+
+if __name__ == "__main__":
+    main()

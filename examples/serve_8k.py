@@ -1,0 +1,16 @@
+"""Serving simulation: the paper's deployment loop (Algorithm 1).
+
+    PYTHONPATH=src python examples/serve_8k.py --frames 4 --hw 96
+
+Streams synthetic frames through the FrameServer: per-frame edge scores,
+resource-adaptive thresholds (the C54/sec ceiling demotes overflow patches
+to C27 — throughput guaranteed, quality floor kept), per-subnet batched
+execution, overlap+average fusion. Prints Table-XI-style summary.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

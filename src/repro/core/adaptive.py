@@ -1,0 +1,104 @@
+"""Resource-adaptive model switching (paper Sec. IV-A, Algorithm 1).
+
+Host-side feedback controller over the two edge thresholds:
+
+  * hard compute ceiling: if the number of C54 patches this second exceeds
+    ``c54_per_sec_budget`` (25 500 for 8K@30FPS on the paper's PE array), the
+    *rest of the patches run with C27* — throughput guaranteed, quality floor
+    kept at C27;
+  * per-frame trim: > ``frame_high`` C54 patches in a frame  -> (t1,t2) += (1,5)
+                    < ``frame_low``  C54 patches in a frame  -> (t1,t2) -= (1,5)
+
+The same controller is reused by the serving runtime as *straggler
+mitigation*: a shard that falls behind its deadline raises the local
+thresholds, demoting its patches (Sec. "runtime" in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import subnet_policy as sp
+
+
+@dataclasses.dataclass
+class SwitchingConfig:
+    t1: float = sp.DEFAULT_T1
+    t2: float = sp.DEFAULT_T2
+    c54_per_sec_budget: int = 25_500
+    frame_high: int = 1000
+    frame_low: int = 700
+    fps: int = 30
+    t1_step: float = 1.0
+    t2_step: float = 5.0
+    t1_bounds: Tuple[float, float] = (0.0, 255.0)
+    t2_bounds: Tuple[float, float] = (1.0, 255.0)
+
+
+class AdaptiveSwitcher:
+    """Stateful Algorithm-1 controller. One instance per stream (or shard)."""
+
+    def __init__(self, cfg: SwitchingConfig = SwitchingConfig()):
+        self.cfg = cfg
+        self.t1 = float(cfg.t1)
+        self.t2 = float(cfg.t2)
+        self._c54_this_second = 0
+        self._frames_this_second = 0
+
+    # -- public -------------------------------------------------------------
+
+    def assign(self, scores: np.ndarray) -> np.ndarray:
+        """Edge scores of one frame's patches (raster order) -> subnet ids.
+
+        Applies the per-second C54 ceiling (demote overflow to C27 in raster
+        order, exactly "the rest of the patches run with C27"), then the
+        per-frame threshold adaptation.
+        """
+        scores = np.asarray(scores)
+        ids = np.array(sp.decide(scores, self.t1, self.t2))  # writable copy
+
+        # --- hard ceiling over the current second -------------------------
+        budget_left = self.cfg.c54_per_sec_budget - self._c54_this_second
+        c54_idx = np.flatnonzero(ids == sp.C54)
+        if len(c54_idx) > budget_left:
+            overflow = c54_idx[max(budget_left, 0):]
+            ids[overflow] = sp.C27
+        n_c54 = int((ids == sp.C54).sum())
+        self._c54_this_second += n_c54
+
+        # --- per-frame threshold trim (Algorithm 1's else-branch) ---------
+        if n_c54 > self.cfg.frame_high:
+            self.t1 += self.cfg.t1_step
+            self.t2 += self.cfg.t2_step
+        elif n_c54 < self.cfg.frame_low:
+            self.t1 -= self.cfg.t1_step
+            self.t2 -= self.cfg.t2_step
+        self._clamp()
+
+        # --- second roll-over ---------------------------------------------
+        self._frames_this_second += 1
+        if self._frames_this_second >= self.cfg.fps:
+            self._frames_this_second = 0
+            self._c54_this_second = 0
+        return ids
+
+    def demote_for_straggler(self, severity: float = 1.0) -> None:
+        """Straggler hook: a late shard raises thresholds proportionally."""
+        self.t1 += self.cfg.t1_step * severity
+        self.t2 += self.cfg.t2_step * severity
+        self._clamp()
+
+    # -- internals ----------------------------------------------------------
+
+    def _clamp(self) -> None:
+        c = self.cfg
+        self.t1 = float(np.clip(self.t1, *c.t1_bounds))
+        self.t2 = float(np.clip(self.t2, *c.t2_bounds))
+        if self.t2 <= self.t1:          # keep the decision boundary ordered
+            self.t2 = self.t1 + 1.0
+
+    @property
+    def thresholds(self) -> Tuple[float, float]:
+        return (self.t1, self.t2)

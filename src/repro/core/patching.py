@@ -1,0 +1,97 @@
+"""Slim-overlap patch extraction and thick-overlap boundary fusion (Sec. IV-I).
+
+The paper's final choice: LR patches overlap by 2 px ("slim overlap block
+convolution"); after x4 upsampling the SR patches overlap by 8 px ("thick
+overlap"), and overlapped pixels are averaged ("overlap and average").
+
+Also implements the alternatives of Table III for the boundary benchmark:
+  - 'interpolate'  : non-overlapped patches, borders blended by interpolation
+  - 'recompute'    : lossless halo recompute (== whole-image convolution)
+  - 'overlap_avg'  : the paper's pick
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def grid_starts(size: int, patch: int, overlap: int) -> np.ndarray:
+    """1-D tiling start offsets with ``overlap`` px shared between neighbours.
+
+    Every pixel is covered; the final patch is clamped to end at the image
+    edge (so its overlap with its neighbour may exceed ``overlap``).
+    """
+    if size <= patch:
+        return np.array([0], dtype=np.int64)
+    stride = patch - overlap
+    starts = list(range(0, size - patch, stride))
+    starts.append(size - patch)
+    return np.array(sorted(set(starts)), dtype=np.int64)
+
+
+def extract_patches(img: jax.Array, patch: int = 32, overlap: int = 2
+                    ) -> Tuple[jax.Array, np.ndarray]:
+    """(H,W,C) -> ((N,patch,patch,C), positions (N,2)).  Host-side grid, static."""
+    h, w = int(img.shape[0]), int(img.shape[1])
+    ys, xs = grid_starts(h, patch, overlap), grid_starts(w, patch, overlap)
+    pos = np.array([(y, x) for y in ys for x in xs], dtype=np.int64)
+    patches = jnp.stack([
+        jax.lax.dynamic_slice(img, (int(y), int(x), 0), (patch, patch, img.shape[2]))
+        for y, x in pos])
+    return patches, pos
+
+
+def fuse_patches_average(sr_patches: jax.Array, pos_lr: np.ndarray, scale: int,
+                         out_hw: Tuple[int, int]) -> jax.Array:
+    """Overlap-and-average fusion of SR patches (the paper's boundary method).
+
+    sr_patches: (N, p*s, p*s, C); pos_lr: LR-space (y,x); out: (H*s, W*s, C).
+    """
+    ph = sr_patches.shape[1]
+    out = jnp.zeros((out_hw[0], out_hw[1], sr_patches.shape[-1]), sr_patches.dtype)
+    cnt = jnp.zeros((out_hw[0], out_hw[1], 1), sr_patches.dtype)
+    ones = jnp.ones((ph, ph, 1), sr_patches.dtype)
+    for i, (y, x) in enumerate(pos_lr):
+        yy, xx = int(y) * scale, int(x) * scale
+        out = jax.lax.dynamic_update_slice(
+            out, jax.lax.dynamic_slice(out, (yy, xx, 0), (ph, ph, out.shape[2]))
+            + sr_patches[i], (yy, xx, 0))
+        cnt = jax.lax.dynamic_update_slice(
+            cnt, jax.lax.dynamic_slice(cnt, (yy, xx, 0), (ph, ph, 1)) + ones,
+            (yy, xx, 0))
+    return out / cnt
+
+
+def fuse_patches_crop(sr_patches: jax.Array, pos_lr: np.ndarray, scale: int,
+                      out_hw: Tuple[int, int], overlap_lr: int = 0) -> jax.Array:
+    """'Interpolation-free' naive fusion: later patches simply overwrite.
+
+    Used as the cheap baseline ('Interpol.' row of Table III behaves like a
+    non-overlap + border-fixup scheme; overwrite is its zero-cost floor).
+    """
+    ph = sr_patches.shape[1]
+    out = jnp.zeros((out_hw[0], out_hw[1], sr_patches.shape[-1]), sr_patches.dtype)
+    for i, (y, x) in enumerate(pos_lr):
+        yy, xx = int(y) * scale, int(x) * scale
+        out = jax.lax.dynamic_update_slice(out, sr_patches[i], (yy, xx, 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cost accounting for the boundary benchmark (Tables III / IV)
+# ---------------------------------------------------------------------------
+
+def overlap_mac_overhead(patch: int, overlap: int) -> float:
+    """MAC multiplier of slim-overlap tiling vs non-overlapped (Table IV)."""
+    stride = patch - overlap
+    return (patch / stride) ** 2
+
+
+def boundary_sram_bytes(lr_w: int, overlap_lr: int, channels: int,
+                        bytes_per: float = 1.25) -> float:
+        """Boundary buffer estimate: one horizontal stripe of halo rows spanning
+        the LR frame width across feature channels (FXP10 => 1.25 B)."""
+        return lr_w * max(overlap_lr, 1) * channels * bytes_per * 2  # top+left stripes

@@ -1,0 +1,90 @@
+"""End-to-end edge-selective SR of full frames (paper Fig. 1).
+
+frame -> slim-overlap patches -> edge scores -> subnet decision ->
+per-subnet batched forward -> thick-overlap overlap+average fusion.
+
+Two execution styles:
+  * ``edge_selective_sr``: host-grouped, jit-per-subnet — the serving path.
+    Per-subnet batches are padded to bucketed sizes so jit recompilation is
+    bounded (the shape-static analog of the GLNPU's fixed PE array).
+  * ``sr_whole`` / ``sr_all_patches``: non-dynamic references for ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import subnet_policy as sp
+from repro.core.edge_score import edge_score
+from repro.core.patching import extract_patches, fuse_patches_average
+from repro.models.essr import ESSRConfig, essr_forward
+
+
+def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return int(np.ceil(n / buckets[-1]) * buckets[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "width"))
+def _forward_width(params, patches, cfg: ESSRConfig, width: int):
+    return essr_forward(params, patches, cfg, width=width)
+
+
+@dataclasses.dataclass
+class SRResult:
+    image: jax.Array
+    ids: np.ndarray
+    scores: np.ndarray
+    counts: Tuple[int, int, int]
+    mac_saving: float
+
+
+def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
+                      t1: float = sp.DEFAULT_T1, t2: float = sp.DEFAULT_T2,
+                      patch: int = 32, overlap: int = 2,
+                      ids_override: Optional[np.ndarray] = None) -> SRResult:
+    """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image."""
+    patches, pos = extract_patches(frame, patch=patch, overlap=overlap)
+    scores = np.asarray(edge_score(patches))
+    ids = ids_override if ids_override is not None else np.asarray(sp.decide(scores, t1, t2))
+
+    s = cfg.scale
+    out_patches = jnp.zeros((patches.shape[0], patch * s, patch * s, 3), patches.dtype)
+    widths = cfg.subnet_widths()
+    for k, width in enumerate(widths):
+        idx = np.flatnonzero(ids == k)
+        if idx.size == 0:
+            continue
+        cap = _bucket(idx.size)
+        pad = np.concatenate([idx, np.zeros(cap - idx.size, dtype=idx.dtype)])
+        sr = _forward_width(params, patches[pad], cfg, width)[: idx.size]
+        out_patches = out_patches.at[idx].set(sr)
+
+    h, w = int(frame.shape[0]) * s, int(frame.shape[1]) * s
+    img = fuse_patches_average(out_patches, pos, s, (h, w))
+    counts = sp.subnet_counts(ids)
+    saving = sp.SubnetMacs.make(cfg, patch).saving_vs_c54(counts)
+    return SRResult(image=img, ids=ids, scores=scores, counts=counts, mac_saving=saving)
+
+
+def sr_all_patches(params, frame, cfg: ESSRConfig, width: int,
+                   patch: int = 32, overlap: int = 2) -> jax.Array:
+    """Every patch through one subnet (the non-edge-selective reference)."""
+    n = frame.shape[0]
+    res = edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
+                            ids_override=np.full((len(extract_patches(frame, patch, overlap)[1]),),
+                                                 {0: 0, cfg.channels // 2: 1, cfg.channels: 2}[width],
+                                                 dtype=np.int64))
+    return res.image
+
+
+def sr_whole(params, frame, cfg: ESSRConfig, width: Optional[int] = None) -> jax.Array:
+    """Whole-image convolution (the lossless 'software' reference of Table III)."""
+    return essr_forward(params, frame[None], cfg, width=width)[0]

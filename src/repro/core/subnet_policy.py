@@ -1,0 +1,89 @@
+"""Subnet decision with input edge thresholds (paper Sec. II-C, Fig. 5).
+
+Three subnets: 0 = bilinear, 1 = C27, 2 = C54.
+    score <  t1        -> bilinear
+    t1 <= score < t2   -> C27
+    score >= t2        -> C54
+
+MAC accounting follows the paper: savings are reported relative to running
+every patch through the full C54 net.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.essr import ESSRConfig, essr_macs_per_lr_pixel
+
+BILINEAR, C27, C54 = 0, 1, 2
+SUBNET_NAMES = ("bilinear", "C27", "C54")
+
+DEFAULT_T1 = 8.0
+DEFAULT_T2 = 40.0
+
+
+def decide(scores: jax.Array, t1: float = DEFAULT_T1, t2: float = DEFAULT_T2) -> jax.Array:
+    """(N,) edge scores -> (N,) subnet ids in {0,1,2}."""
+    return jnp.where(scores >= t2, C54, jnp.where(scores >= t1, C27, BILINEAR)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubnetMacs:
+    """Per-patch MAC cost of each subnet for a given ESSR config / patch size."""
+    per_patch: Tuple[int, int, int]
+
+    @staticmethod
+    def make(cfg: ESSRConfig, patch: int = 32) -> "SubnetMacs":
+        area = patch * patch
+        widths = cfg.subnet_widths()
+        return SubnetMacs(tuple(essr_macs_per_lr_pixel(cfg, w) * area for w in widths))
+
+    def total(self, counts) -> int:
+        return int(sum(int(c) * m for c, m in zip(counts, self.per_patch)))
+
+    def saving_vs_c54(self, counts) -> float:
+        n = int(sum(int(c) for c in counts))
+        full = n * self.per_patch[C54]
+        return 1.0 - self.total(counts) / full if full else 0.0
+
+
+def subnet_counts(ids) -> Tuple[int, int, int]:
+    ids = np.asarray(ids)
+    return tuple(int((ids == k).sum()) for k in (BILINEAR, C27, C54))
+
+
+def mac_saving(scores, t1: float, t2: float, cfg: ESSRConfig,
+               patch: int = 32) -> Dict[str, float]:
+    ids = decide(jnp.asarray(scores), t1, t2)
+    counts = subnet_counts(ids)
+    m = SubnetMacs.make(cfg, patch)
+    return {
+        "counts": counts,
+        "total_macs": m.total(counts),
+        "saving_vs_c54": m.saving_vs_c54(counts),
+    }
+
+
+def thresholds_for_target_saving(scores, target: float, cfg: ESSRConfig,
+                                 patch: int = 32,
+                                 t1_grid=None, t2_grid=None) -> Tuple[float, float]:
+    """Search (t1,t2) giving MAC saving closest to ``target`` (paper Table X's
+    40/50/60% operating points). Coarse grid — the decision space is tiny."""
+    scores = np.asarray(scores)
+    t1_grid = t1_grid if t1_grid is not None else np.arange(0, 41, 2)
+    t2_grid = t2_grid if t2_grid is not None else np.arange(10, 201, 5)
+    best, best_err = (DEFAULT_T1, DEFAULT_T2), np.inf
+    m = SubnetMacs.make(cfg, patch)
+    for t1 in t1_grid:
+        for t2 in t2_grid:
+            if t2 <= t1:
+                continue
+            counts = subnet_counts(decide(jnp.asarray(scores), float(t1), float(t2)))
+            err = abs(m.saving_vs_c54(counts) - target)
+            if err < best_err:
+                best, best_err = (float(t1), float(t2)), err
+    return best

@@ -1,0 +1,56 @@
+"""Weight-shared supernet training (paper Sec. V-A, following ARM).
+
+One parameter set serves both C27 and C54: C27 is the first-27-channel slice
+(``repro.models.essr.slice_width``). Training samples ONE subnet per
+iteration with probability proportional to its MACs, computes the loss on
+that subnet only, and updates the (shared) parameters — gradients flow only
+into the selected slice, which is exactly ARM's update rule.
+
+Bilinear has no parameters and is never sampled.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.essr import ESSRConfig, essr_forward, essr_macs_per_lr_pixel
+
+
+def subnet_sampling_probs(cfg: ESSRConfig) -> np.ndarray:
+    """p(subnet) ∝ MACs over the trainable subnets (C27, C54)."""
+    widths = [w for w in cfg.subnet_widths() if w > 0]
+    macs = np.array([essr_macs_per_lr_pixel(cfg, w) for w in widths], dtype=np.float64)
+    return macs / macs.sum()
+
+
+def sample_width(key: jax.Array, cfg: ESSRConfig) -> int:
+    widths = [w for w in cfg.subnet_widths() if w > 0]
+    p = subnet_sampling_probs(cfg)
+    idx = int(jax.random.choice(key, len(widths), p=jnp.asarray(p)))
+    return widths[idx]
+
+
+def supernet_loss_fn(loss: Callable[[jax.Array, jax.Array], jax.Array],
+                     cfg: ESSRConfig):
+    """Build ``(params, batch, width) -> scalar`` for sampled-subnet training.
+
+    ``width`` is static (two jit specializations: 27 and 54)."""
+
+    def fn(params: Dict[str, Any], lr: jax.Array, hr: jax.Array, *, width: int):
+        sr = essr_forward(params, lr, cfg, width=width)
+        return loss(sr, hr)
+
+    return fn
+
+
+def ema_init(params) -> Any:
+    return jax.tree_util.tree_map(lambda x: x, params)
+
+
+def ema_update(ema, params, decay: float = 0.999):
+    """Exponential moving average of weights (paper: decay 0.999)."""
+    return jax.tree_util.tree_map(
+        lambda e, p: decay * e + (1.0 - decay) * p, ema, params)

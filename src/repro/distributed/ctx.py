@@ -1,0 +1,81 @@
+"""Sharding context: lets model code place activation sharding constraints
+without depending on a concrete mesh (no-op when unset, e.g. CPU smoke tests).
+
+Model code says ``constrain(x, "dp", "mp", None)`` — symbolic axes:
+  'dp' -> the data-parallel axes (('pod','data') multi-pod, ('data',) single)
+  'mp' -> the model axis.
+Dims that don't divide the named axis size silently drop the constraint
+(defensive: qwen2's 14 heads, batch-1 decode, etc.).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp: Tuple[str, ...]               # data-parallel mesh axes
+    mp: str                           # model axis
+
+    def axis_size(self, sym: Axis) -> int:
+        if sym is None:
+            return 1
+        names = self.dp if sym == "dp" else (self.mp,) if sym == "mp" else sym
+        return math.prod(self.mesh.shape[n] for n in names)
+
+    def resolve(self, sym: Axis):
+        if sym is None:
+            return None
+        if sym == "dp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if sym == "mp":
+            return self.mp
+        return sym
+
+    def spec(self, x_shape, axes: Sequence[Axis]) -> P:
+        entries = []
+        for dim, sym in zip(x_shape, axes):
+            if sym is not None and dim % self.axis_size(sym) == 0 and dim > 0:
+                entries.append(self.resolve(sym))
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    def constrain(self, x: jax.Array, *axes: Axis) -> jax.Array:
+        spec = self.spec(x.shape, axes)
+        return lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+_CURRENT: Optional[ShardCtx] = None
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: Optional[ShardCtx]):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def current() -> Optional[ShardCtx]:
+    return _CURRENT
+
+
+def constrain(x: jax.Array, *axes: Axis) -> jax.Array:
+    """Module-level hook used inside model code. No-op without a context."""
+    if _CURRENT is None:
+        return x
+    return _CURRENT.constrain(x, *axes)

@@ -1,0 +1,231 @@
+"""PartitionSpec rules for every parameter / cache / input in the framework.
+
+Strategy (DESIGN.md §6):
+  * FSDP  — weights' d_model-like dims sharded over the data axes (ZeRO-3);
+  * TP    — head / hidden / vocab / expert dims over 'model';
+  * EP    — MoE expert dim over 'model' when n_experts >= mesh model size;
+  * SP    — activations' sequence dim over 'model' (ctx.constrain in model);
+  * caches— kv-heads over 'model' when divisible, else SEQUENCE over 'model'
+            (GQA kv=8 < 16: the flash-decoding layout); batch over data axes
+            when divisible (batch-1 long-context shards seq over data too).
+
+Every rule is divisibility-guarded so reduced smoke configs and small test
+meshes never produce invalid specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.distributed.ctx import ShardCtx
+
+
+# ---------------------------------------------------------------------------
+# mesh info
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    dp: Tuple[str, ...]
+    mp: str
+
+    @property
+    def dp_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.dp)
+
+    @property
+    def mp_size(self) -> int:
+        return self.mesh.shape[self.mp]
+
+    @property
+    def dp_resolved(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    def ctx(self) -> ShardCtx:
+        return ShardCtx(self.mesh, self.dp, self.mp)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def mesh_info(mesh: Mesh) -> MeshInfo:
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return MeshInfo(mesh, dp, "model")
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _base_spec(path: str, shape: Tuple[int, ...], cfg: LMConfig, mi: MeshInfo) -> P:
+    """Spec for the UNSTACKED parameter (no leading layer dim)."""
+    dp, mp = mi.dp_resolved, mi.mp
+    dpn, mpn = mi.dp_size, mi.mp_size
+    fs = lambda n: dp if _div(n, dpn) else None          # fsdp if divisible
+    tp = lambda n: mp if _div(n, mpn) else None
+
+    leaf = path.split("/")[-1]
+
+    # --- embeddings / heads -------------------------------------------------
+    if leaf == "embed":
+        return P(tp(shape[0]), fs(shape[1]))
+    if leaf == "lm_head" or leaf == "vision_proj" or leaf == "proj":
+        return P(fs(shape[0]), tp(shape[1]))
+
+    # --- norms / scalars / small vectors ------------------------------------
+    if len(shape) <= 1:
+        return P(*([None] * len(shape)))
+
+    # --- MoE ----------------------------------------------------------------
+    if "/moe/" in path or path.endswith("router"):
+        if leaf == "router":
+            return P(fs(shape[0]), None)
+        if leaf in ("w_in", "w_gate") and len(shape) == 3:
+            if cfg.moe_mode == "ep_alltoall" and _div(shape[0], mpn):
+                return P(mp, fs(shape[1]), None)
+            return P(None, fs(shape[1]), tp(shape[2]))
+        if leaf == "w_out" and len(shape) == 3:
+            if cfg.moe_mode == "ep_alltoall" and _div(shape[0], mpn):
+                return P(mp, None, fs(shape[2]))
+            return P(None, tp(shape[1]), fs(shape[2]))
+        # shared expert falls through to the mlp rules below
+
+    # --- attention (GQA + MLA + cross) ---------------------------------------
+    heads_ok = _div(cfg.n_heads * cfg.resolved_head_dim, mpn) and _div(cfg.n_heads, mpn)
+    kv_ok = _div(cfg.n_kv_heads, mpn)
+    if leaf in ("wq",):
+        return P(fs(shape[0]), mp if heads_ok else None)
+    if leaf in ("wk", "wv"):
+        return P(fs(shape[0]), mp if kv_ok else None)
+    if leaf == "wo":
+        return P(mp if heads_ok else None, fs(shape[1]))
+    if leaf in ("bq",):
+        return P(mp if heads_ok else None)
+    if leaf in ("bk", "bv"):
+        return P(mp if kv_ok else None)
+    if leaf in ("wdq", "wdkv", "wkr"):
+        return P(fs(shape[0]), None)
+    if leaf in ("wuq", "wukv"):
+        return P(None, mp if _div(cfg.n_heads, mpn) else None)
+
+    # --- dense MLP -----------------------------------------------------------
+    if leaf in ("w_in", "w_gate"):
+        return P(fs(shape[0]), tp(shape[1]))
+    if leaf == "w_out":
+        return P(tp(shape[0]), fs(shape[1]))
+
+    # --- mamba ---------------------------------------------------------------
+    if "/mamba/" in path:
+        di = cfg.d_inner
+        if leaf == "in_proj":
+            # mamba1 (D, 2*di): aligned x/z halves -> TP ok.
+            if shape[1] == 2 * di and _div(di, mpn):
+                return P(fs(shape[0]), mp)
+            return P(fs(shape[0]), None)
+        if leaf in ("w_z", "w_x"):          # mamba2 split projections (§Perf Z4)
+            return P(fs(shape[0]), tp(shape[1]))
+        if leaf in ("w_bc",):               # (D, 2n): B/C are head-shared
+            return P(fs(shape[0]), None)
+        if leaf == "w_dt":                  # (D, H): dt heads follow x heads
+            return P(fs(shape[0]), tp(shape[1]))
+        if leaf == "conv_w":
+            return P(None, mp if shape[1] == di and _div(di, mpn) else None)
+        if leaf == "x_proj":
+            return P(mp if _div(shape[0], mpn) else None, None)
+        if leaf == "dt_proj":
+            return P(None, tp(shape[1]))
+        if leaf == "A_log" and len(shape) == 2:
+            return P(tp(shape[0]), None)
+        if leaf in ("A_log", "dt_bias", "D") and len(shape) == 1:
+            return P(tp(shape[0]))          # per-head scalars follow the heads
+        if leaf == "norm_w":
+            return P(tp(shape[0]))
+        if leaf == "out_proj":
+            return P(tp(shape[0]), fs(shape[1]))
+        return P(*([None] * len(shape)))
+
+    # --- fallback: FSDP the largest dim --------------------------------------
+    big = int(np.argmax(shape))
+    spec = [None] * len(shape)
+    if _div(shape[big], dpn):
+        spec[big] = dp
+    return P(*spec)
+
+
+def param_specs(params: Any, cfg: LMConfig, mi: MeshInfo) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (stacked-layer aware)."""
+
+    def visit(path_keys, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path_keys]
+        path = "/".join(str(n) for n in names)
+        stacked = names and names[0] in ("layers", "enc_layers", "dec_layers")
+        shape = tuple(leaf.shape)
+        base_shape = shape[1:] if stacked else shape
+        spec = _base_spec(path, base_shape, cfg, mi)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# cache / input specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(caches: Any, cfg: LMConfig, mi: MeshInfo, batch: int) -> Any:
+    """KV/state cache PartitionSpecs. Heads over 'model' when divisible, else
+    sequence over 'model'; batch over dp when divisible, else sequence also
+    takes the data axes (512K batch-1 long-context)."""
+    dp, mp = mi.dp_resolved, mi.mp
+    batch_ok = _div(batch, mi.dp_size)
+
+    def visit(path_keys, leaf):
+        names = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path_keys)
+        shape = tuple(leaf.shape)
+        bdim = dp if batch_ok else None
+        if names.endswith("ckv") or names.endswith("kr"):       # (L,B,S,r)
+            seq_axes = mp if batch_ok else ((dp, mp) if _div(shape[2], mi.dp_size * mi.mp_size) else mp)
+            return P(None, bdim, seq_axes if _div(shape[2], mi.mp_size) else None, None)
+        if names.split("/")[-1] in ("k", "v"):                  # (L,B,S,G,hd)
+            if _div(shape[3], mi.mp_size):
+                seq = None if batch_ok else (dp if _div(shape[2], mi.dp_size) else None)
+                return P(None, bdim, seq, mp, None)
+            seq_axes = mp if batch_ok else ((dp, mp) if _div(shape[2], mi.dp_size * mi.mp_size) else mp)
+            return P(None, bdim, seq_axes if _div(shape[2], mi.mp_size) else None, None, None)
+        if "ssm/h" in names:                                    # (L,B,di,n) | (L,B,H,P,n)
+            spec = [None, bdim] + [None] * (len(shape) - 2)
+            if _div(shape[2], mi.mp_size):
+                spec[2] = mp
+            return P(*spec)
+        if "ssm/conv" in names:                                 # (L,B,k-1,C)
+            return P(None, bdim, None, mp if _div(shape[3], mi.mp_size) else None)
+        spec = [None, bdim] + [None] * (len(shape) - 2)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, caches)
+
+
+def batch_specs(batch_leaves: Any, mi: MeshInfo) -> Any:
+    """Inputs: batch dim over dp when divisible; everything else replicated."""
+    dp = mi.dp_resolved
+
+    def visit(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        return P(dp if _div(b, mi.dp_size) else None, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(visit, batch_leaves)

@@ -1,0 +1,81 @@
+"""Fused BSConv Pallas kernel — the GLNPU "BSConv fusion" group (Fig. 10).
+
+One ``pallas_call`` executes 1x1 pointwise (MXU matmul) + 3x3 depthwise
+(VPU shifted-accumulate) back-to-back: the intermediate feature lives only in
+VMEM/VREGs, never round-tripping HBM — the TPU analog of the paper's 43%
+feature-SRAM-access saving.
+
+Tiling: grid over patch-batch; block = (Bblk, H, W, C). Weights use a
+constant index_map (block 0 every step) so Mosaic keeps them VMEM-resident
+across grid steps — "weights remain stationary during computing" (Sec. IV-G).
+The pointwise runs as an (Bblk*H*W, Cin)@(Cin, Cout) matmul: rows are a
+multiple of 256 for 32x32 patches, MXU-aligned; channels (54) are lane-padded
+by Mosaic (the C=54-vs-128 padding loss is immaterial — the op is HBM-bound,
+see EXPERIMENTS.md §Roofline/ESSR).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw3x3(y: jax.Array, dw: jax.Array) -> jax.Array:
+    """3x3 depthwise, SAME zero-pad, via 9 shifted multiply-accumulates.
+
+    y: (B,H,W,C); dw: (3,3,C). Static slices only — Mosaic-friendly."""
+    b, h, w, c = y.shape
+    yp = jnp.pad(y, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros_like(y)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + yp[:, dy:dy + h, dx:dx + w, :] * dw[dy, dx]
+    return acc
+
+
+def bsconv_kernel(x_ref, pw_ref, pwb_ref, dw_ref, dwb_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    b, h, w, cin = x.shape
+    cout = pw_ref.shape[-1]
+    # --- 1x1 pointwise on the MXU -----------------------------------------
+    y = jnp.dot(x.reshape(b * h * w, cin), pw_ref[...],
+                preferred_element_type=jnp.float32)
+    y = (y + pwb_ref[...]).reshape(b, h, w, cout)
+    # --- 3x3 depthwise on the VPU (feature never leaves VMEM) -------------
+    y = _dw3x3(y, dw_ref[...]) + dwb_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_patches", "interpret"))
+def bsconv_fused(x, pw, pw_b, dw, dw_b, *, relu: bool = False,
+                 block_patches: int = 4, interpret: bool = True):
+    """x: (N,H,W,Cin); pw: (Cin,Cout); dw: (3,3,Cout); biases (Cout,).
+
+    ``block_patches``: patches per grid step. The C27 subnet doubles it at the
+    same VMEM budget (ops.py) — the "configurable group of layer mapping".
+    """
+    n, h, w, cin = x.shape
+    cout = pw.shape[-1]
+    bblk = min(block_patches, n)
+    assert n % bblk == 0, f"patch count {n} not divisible by block {bblk}"
+    pwb2 = pw_b.reshape(1, cout)
+    dwb2 = dw_b.reshape(1, cout)
+    grid = (n // bblk,)
+    return pl.pallas_call(
+        functools.partial(bsconv_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bblk, h, w, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),      # stationary
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+            pl.BlockSpec((3, 3, cout), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bblk, h, w, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, cout), x.dtype),
+        interpret=interpret,
+    )(x, pw, pwb2, dw, dwb2)

@@ -1,0 +1,52 @@
+"""Fused DSConv Pallas kernel — the GLNPU "DSConv fusion" group (Fig. 12).
+
+3x3 depthwise THEN 1x1 pointwise (the order that kills the pixel-shuffle
+checkerboard, Sec. III-B-3). Last conv of the model: on the ASIC its output
+goes through boundary processing to DRAM; here the fused result goes straight
+back to HBM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bsconv import _dw3x3
+
+
+def dsconv_kernel(x_ref, dw_ref, dwb_ref, pw_ref, pwb_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    b, h, w, cin = x.shape
+    cout = pw_ref.shape[-1]
+    y = _dw3x3(x, dw_ref[...]) + dwb_ref[...]
+    y = jnp.dot(y.reshape(b * h * w, cin), pw_ref[...],
+                preferred_element_type=jnp.float32) + pwb_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.reshape(b, h, w, cout).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_patches", "interpret"))
+def dsconv_fused(x, dw, dw_b, pw, pw_b, *, relu: bool = False,
+                 block_patches: int = 4, interpret: bool = True):
+    """x: (N,H,W,Cin); dw: (3,3,Cin); pw: (Cin,Cout)."""
+    n, h, w, cin = x.shape
+    cout = pw.shape[-1]
+    bblk = min(block_patches, n)
+    assert n % bblk == 0
+    return pl.pallas_call(
+        functools.partial(dsconv_kernel, relu=relu),
+        grid=(n // bblk,),
+        in_specs=[
+            pl.BlockSpec((bblk, h, w, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, cin), lambda i: (0, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bblk, h, w, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, cout), x.dtype),
+        interpret=interpret,
+    )(x, dw, dw_b.reshape(1, cin), pw, pw_b.reshape(1, cout))

@@ -1,0 +1,43 @@
+"""Edge-score Pallas kernel — the paper's edge-threshold computing unit.
+
+luma (BT.601) -> 3x3 Laplacian (VALID) -> |.| clamp [0,255] -> mean, one
+scalar per patch. On the ASIC this is a dedicated small block; on TPU it is a
+tiny VPU kernel fused over a patch-batch block so the router never needs a
+second pass over HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def edge_kernel(x_ref, o_ref):
+    x = x_ref[...]                                   # (B,h,w,3) in [0,1]
+    b, h, w, _ = x.shape
+    luma = (65.481 * x[..., 0] + 128.553 * x[..., 1] + 24.966 * x[..., 2]) + 16.0
+    # 4-neighbour Laplacian on the interior (VALID)
+    c = luma[:, 1:h - 1, 1:w - 1]
+    lap = (luma[:, :h - 2, 1:w - 1] + luma[:, 2:, 1:w - 1]
+           + luma[:, 1:h - 1, :w - 2] + luma[:, 1:h - 1, 2:] - 4.0 * c)
+    resp = jnp.clip(jnp.abs(lap), 0.0, 255.0)
+    o_ref[...] = resp.mean(axis=(1, 2)).reshape(b, 1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_patches", "interpret"))
+def edge_score_fused(x, *, block_patches: int = 64, interpret: bool = True):
+    """x: (N,h,w,3) -> (N,) edge scores."""
+    n, h, w, c = x.shape
+    bblk = min(block_patches, n)
+    assert n % bblk == 0
+    out = pl.pallas_call(
+        edge_kernel,
+        grid=(n // bblk,),
+        in_specs=[pl.BlockSpec((bblk, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bblk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

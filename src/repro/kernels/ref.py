@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of each kernel).
+
+These are compositions of ``repro.models.layers`` primitives — the exact
+semantics the fused kernels must reproduce (asserted with allclose across
+shape/dtype sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edge_score import edge_score as _edge_score_ref
+from repro.models import layers as L
+
+
+def bsconv_ref(x, pw, pw_b, dw, dw_b, *, relu: bool = False):
+    """x:(N,H,W,Ci), pw:(Ci,Co), dw:(3,3,Co) -> (N,H,W,Co). SAME zero-pad."""
+    y = L.pointwise(x, pw[None, None], pw_b)
+    y = L.dwconv2d(y, dw[:, :, None, :], dw_b)
+    return jax.nn.relu(y) if relu else y
+
+
+def dsconv_ref(x, dw, dw_b, pw, pw_b, *, relu: bool = False):
+    """x:(N,H,W,Ci), dw:(3,3,Ci), pw:(Ci,Co) -> (N,H,W,Co)."""
+    y = L.dwconv2d(x, dw[:, :, None, :], dw_b)
+    y = L.pointwise(y, pw[None, None], pw_b)
+    return jax.nn.relu(y) if relu else y
+
+
+def sfb_ref(x, p):
+    """Whole SFB: relu(BSConv) -> relu(BSConv) -> (+x) -> 1x1 -> relu.
+
+    p: dict with b1_pw, b1_pwb, b1_dw, b1_dwb, b2_*, fuse, fuse_b."""
+    y = bsconv_ref(x, p["b1_pw"], p["b1_pwb"], p["b1_dw"], p["b1_dwb"], relu=True)
+    y = bsconv_ref(y, p["b2_pw"], p["b2_pwb"], p["b2_dw"], p["b2_dwb"], relu=True)
+    y = L.pointwise(y + x, p["fuse"][None, None], p["fuse_b"])
+    return jax.nn.relu(y)
+
+
+def edge_score_ref(patches):
+    """(N,h,w,3) RGB in [0,1] -> (N,) edge scores (Sec. II-A)."""
+    return _edge_score_ref(patches)

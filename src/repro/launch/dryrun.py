@@ -1,0 +1,261 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOMs, or unsupported collectives fail HERE.
+Records memory_analysis / cost_analysis / collective bytes per cell to
+results/dryrun/<mesh>/<arch>__<shape>.json for §Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k --mesh multi
+"""
+# The dry-run (and ONLY the dry-run) fakes 512 devices; smoke tests and
+# benches must see 1 device, so this is NOT set in conftest/pyproject.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ALL_SHAPES, LMConfig, ShapeSpec,
+                                active_param_count_estimate, shape_applicable)
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.distributed import sharding as SH
+from repro.launch import costmodel as CM
+from repro.launch import roofline as RL
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+ESSR_ARCHS = ("essr-x4",)
+ESSR_SHAPES = ("serve_8k", "train_patch")
+
+
+def _essr_lower(shape_name: str, mi: SH.MeshInfo, opts: str = ""):
+    """ESSR cells: the paper's own workload on the production mesh.
+    serve_8k: one 8K frame (2304 slim-overlap 32x32 patches + halo) through
+    C54, patches sharded over every chip. train_patch: one supernet step.
+    opts 'int8': PAMS-int8 storage (paper §IV-H adapted to the TPU int8
+    datapath) — weights int8 + per-tensor scale, input frames uint8; this is
+    the §Perf E1 iteration (the cell is memory-bound, int8 halves bytes)."""
+    from repro.models.essr import ESSR_X4, init_essr, essr_forward
+    from repro.train import losses as Ls
+    from repro.train import optimizer as O
+    from jax.sharding import PartitionSpec as P
+
+    int8 = "int8" in opts
+    cfg = ESSR_X4
+    params = jax.eval_shape(lambda k: init_essr(k, cfg, jnp.bfloat16),
+                            jax.random.PRNGKey(0))
+    rep = mi.named(P())
+    pspec = jax.tree_util.tree_map(lambda _: rep, params)
+    all_axes = tuple(mi.dp) + (mi.mp,)
+
+    n_chips = 1
+    for a in all_axes:
+        n_chips *= mi.mesh.shape[a]
+
+    if shape_name == "serve_8k":
+        n = 2304                                   # 64 x 36 patches per frame
+        n = -(-n // n_chips) * n_chips             # pad to the chip count
+        in_dtype = jnp.uint8 if int8 else jnp.bfloat16
+        patches = jax.ShapeDtypeStruct((n, 32, 32, 3), in_dtype,
+                                       sharding=mi.named(P(all_axes, None, None, None)))
+        if int8:
+            params = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.int8), params)
+
+        params = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), params, pspec)
+
+        if int8:
+            def fn(p, x):
+                xf = x.astype(jnp.bfloat16) * (1.0 / 255.0)
+                pf = jax.tree_util.tree_map(
+                    lambda w: w.astype(jnp.bfloat16) * jnp.bfloat16(1 / 64.), p)
+                y = essr_forward(pf, xf, cfg)
+                return jnp.clip(y * 255.0, 0, 255).astype(jnp.uint8)
+        else:
+            fn = lambda p, x: essr_forward(p, x, cfg)
+        return jax.jit(fn).lower(params, patches), 52326 * 2 * n * 1024  # 2*MACs*pixels
+
+    # train_patch: supernet step, paper's batch 256 scaled to the chip count
+    opt = O.lamb(3e-3)
+    state = {"params": params, "opt": jax.eval_shape(opt.init, params)}
+    sspec = jax.tree_util.tree_map(lambda _: rep, state)
+    state = jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), state, sspec)
+    gb = max(256, n_chips)
+    lr = jax.ShapeDtypeStruct((gb, 32, 32, 3), jnp.bfloat16,
+                              sharding=mi.named(P(all_axes, None, None, None)))
+    hr = jax.ShapeDtypeStruct((gb, 128, 128, 3), jnp.bfloat16,
+                              sharding=mi.named(P(all_axes, None, None, None)))
+
+    def step(state, lr_img, hr_img):
+        def loss_fn(p):
+            return Ls.l1_loss(essr_forward(p, lr_img, cfg), hr_img)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        upd, opt_state = opt.update(grads, state["opt"], state["params"])
+        return {"params": O.apply_updates(state["params"], upd), "opt": opt_state}, loss
+
+    return (jax.jit(step, donate_argnums=(0,)).lower(state, lr, hr),
+            6 * 52326 * 256 * 1024)
+
+
+def apply_opts(cfg, opts: str):
+    """§Perf iteration knobs, comma-separated:
+    token_shard (G1/D2), ssd (Z1), cf1 (capacity factor 1.0), chunk64."""
+    import dataclasses
+    for opt in [o for o in opts.split(",") if o]:
+        if opt == "token_shard":
+            cfg = dataclasses.replace(cfg, moe_dispatch_token_shard=True)
+        elif opt == "moe_shardmap":
+            cfg = dataclasses.replace(cfg, moe_impl="shard_map")
+        elif opt == "mla_lazy":
+            cfg = dataclasses.replace(cfg, mla_lazy_kv=True)
+        elif opt == "ssd":
+            cfg = dataclasses.replace(cfg, mamba2_impl="ssd")
+        elif opt == "cf1":
+            cfg = dataclasses.replace(cfg, capacity_factor=1.0)
+        elif opt.startswith("chunk"):
+            cfg = dataclasses.replace(cfg, ssm_chunk=int(opt[5:]))
+        elif opt.startswith("attnchunk"):
+            cfg = dataclasses.replace(cfg, attn_chunk=int(opt[9:]))
+        else:
+            raise ValueError(f"unknown opt {opt}")
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, remat: bool = True,
+             moment_dtype="float32", force: bool = False,
+             out_dir: Optional[str] = None, tag: str = "", opts: str = "") -> dict:
+    out_dir = out_dir or os.path.abspath(RESULTS)
+    os.makedirs(os.path.join(out_dir, mesh_kind), exist_ok=True)
+    fname = os.path.join(out_dir, mesh_kind, f"{arch}__{shape_name}{tag}.json")
+    if os.path.exists(fname) and not force:
+        with open(fname) as f:
+            return json.load(f)
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+           "status": "ok"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        mi = SH.mesh_info(mesh)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+
+        if arch in ESSR_ARCHS:
+            lowered, mflops = _essr_lower(shape_name, mi, opts)
+        else:
+            cfg = apply_opts(get_config(arch), opts)
+            shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+            ok, reason = shape_applicable(cfg, shape)
+            if not ok:
+                rec.update(status="skip", reason=reason)
+                _write(fname, rec)
+                return rec
+            cell = ST.lower_cell(cfg, shape, mi, remat=remat,
+                                 moment_dtype=getattr(jnp, moment_dtype))
+            lowered = cell.lowered
+            mflops = RL.model_flops(cfg, shape, active_param_count_estimate(cfg))
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory_per_device"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_gb": round((mem.argument_size_in_bytes + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        }
+        ca = compiled.cost_analysis() or {}
+        raw_flops = float(ca.get("flops", 0.0))
+        raw_bytes = float(ca.get("bytes accessed", 0.0))
+        txt = compiled.as_text()
+        colls = RL.parse_collective_bytes(txt)
+        dot_flops = RL.parse_dot_flops(txt)       # trip-count-aware, per device
+        rec["cost_per_device_raw_xla"] = {        # while-bodies counted ONCE (lower bound)
+            "flops": raw_flops, "bytes_accessed": raw_bytes}
+        rec["collectives_per_device_bytes"] = colls
+        coll_total = sum(v for k, v in colls.items() if k != "count")
+
+        if arch in ESSR_ARCHS:
+            analytic = None
+            flops_dev = max(dot_flops, raw_flops)
+            bytes_dev = raw_bytes
+        else:
+            analytic = CM.cell_cost(cfg, shape, n_chips)
+            rec["analytic_global"] = analytic.as_dict()
+            # flops: measured trip-aware dot walk (+ analytic SSM elementwise
+            # which the dot walk cannot see); bytes: analytic model.
+            flops_dev = dot_flops if dot_flops > 0 else analytic.flops_global / n_chips
+            if cfg.family in ("ssm", "hybrid"):
+                flops_dev = max(flops_dev, analytic.flops_global / n_chips)
+            bytes_dev = analytic.hbm_bytes_global / n_chips
+        rec["measured_dot_flops_per_device"] = dot_flops
+        rec["roofline"] = RL.roofline(flops_dev, bytes_dev, coll_total, n_chips,
+                                      mflops).as_dict()
+        rec["n_chips"] = n_chips
+    except Exception as e:                                    # noqa: BLE001
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["total_s"] = round(time.time() - t0, 2)
+    _write(fname, rec)
+    return rec
+
+
+def _write(fname, rec):
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"all | essr-x4 | {','.join(ARCH_NAMES)}")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat", default="true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration records")
+    ap.add_argument("--opts", default="", help="see apply_opts")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) + list(ESSR_ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh_kind in meshes:
+        for arch in archs:
+            shapes = (list(ESSR_SHAPES) if arch in ESSR_ARCHS
+                      else [s.name for s in ALL_SHAPES])
+            if args.shape != "all":
+                shapes = [s for s in shapes if s in args.shape.split(",")]
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_kind, force=args.force,
+                               remat=args.remat == "true",
+                               moment_dtype=args.moment_dtype, tag=args.tag,
+                               opts=args.opts)
+                r = rec.get("roofline", {})
+                print(f"[{mesh_kind}] {arch:24s} {shape_name:12s} {rec['status']:4s} "
+                      f"compile={rec.get('compile_s', '-'):>7}s "
+                      f"dom={r.get('dominant', '-'):10s} "
+                      f"mem/dev={rec.get('memory_per_device', {}).get('total_gb', '-')}GB",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

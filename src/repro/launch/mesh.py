@@ -1,0 +1,22 @@
+"""Production mesh definition (assignment-mandated shapes).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import (dryrun.py)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips (pod = DP by default;
+    the optional pipeline mode maps stages onto it instead)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU distributed tests (requires >=4 host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

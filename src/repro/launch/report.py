@@ -1,0 +1,117 @@
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+ARCH_ORDER = ["grok-1-314b", "deepseek-v3-671b", "seamless-m4t-medium",
+              "granite-8b", "qwen2-0.5b", "minitron-8b", "granite-3-2b",
+              "falcon-mamba-7b", "zamba2-1.2b", "internvl2-26b", "essr-x4"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "serve_8k", "train_patch"]
+
+
+def _fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(mesh: str, tag_filter=""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(os.path.abspath(RESULTS), mesh, "*.json"))):
+        d = json.load(open(f))
+        if (d.get("tag") or "") != tag_filter:
+            continue
+        rows.append(d)
+    key = lambda d: (ARCH_ORDER.index(d["arch"]) if d["arch"] in ARCH_ORDER else 99,
+                     SHAPE_ORDER.index(d["shape"]) if d["shape"] in SHAPE_ORDER else 99)
+    return sorted(rows, key=key)
+
+
+def dryrun_table(mesh: str) -> str:
+    out = [f"### Mesh: {mesh} "
+           + ("(2 pods x 16 x 16 = 512 chips)" if mesh == "multi" else "(16 x 16 = 256 chips)"),
+           "",
+           "| arch | shape | status | compile | bytes/dev | HLO dot-flops/dev | collective B/dev | #colls |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in load(mesh):
+        if d["status"] != "ok":
+            reason = d.get("reason", d.get("error", ""))[:60]
+            out.append(f"| {d['arch']} | {d['shape']} | **{d['status']}** — {reason} | | | | | |")
+            continue
+        mem = d["memory_per_device"]
+        coll = d["collectives_per_device_bytes"]
+        coll_total = sum(v for k, v in coll.items() if k != "count")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | ok | {d['compile_s']:.1f}s "
+            f"| {mem['total_gb']:.2f} GB | {d.get('measured_dot_flops_per_device', 0):.3g} "
+            f"| {coll_total:.3g} | {coll['count']} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful ratio |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in load(mesh):
+        if d["status"] != "ok" or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} "
+            f"| {_fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['model_flops_global']:.3g} | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def perf_table(arch: str, shape: str, mesh: str = "single") -> str:
+    """Iteration log rows for one hillclimbed cell (all tags)."""
+    files = glob.glob(os.path.join(os.path.abspath(RESULTS), mesh, f"{arch}__{shape}*.json"))
+    rows = []
+    for f in sorted(files):
+        d = json.load(open(f))
+        if d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        coll = d["collectives_per_device_bytes"]
+        rows.append((d.get("tag") or "baseline",
+                     f"| {d.get('tag') or 'baseline'} | {_fmt_s(r['compute_s'])} "
+                     f"| {_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} "
+                     f"| {d['memory_per_device']['total_gb']:.1f} GB "
+                     f"| {sum(v for k, v in coll.items() if k != 'count')/2**40:.2f} TB "
+                     f"| {r['useful_flops_ratio']:.2f} |"))
+    head = ["| iteration | compute | memory | collective | mem/dev | coll bytes/dev | useful |",
+            "|---|---|---|---|---|---|---|"]
+    return "\n".join(head + [r[1] for r in sorted(rows)])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--perf", default="")
+    args = ap.parse_args()
+    if args.perf:
+        arch, shape = args.perf.split(":")
+        print(perf_table(arch, shape))
+        return
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        print(dryrun_table(m))
+        print()
+        print(roofline_table(m))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms, per (arch x shape x mesh):
+    compute    = HLO_FLOPs / (chips * peak)         [peak 197 TFLOP/s bf16]
+    memory     = HLO_bytes / (chips * HBM_bw)       [819 GB/s]
+    collective = collective_bytes / (chips * link)  [~50 GB/s/link ICI]
+
+XLA's cost_analysis reports the PER-DEVICE program (post-SPMD), so
+per-device quantities divide by per-chip rates directly; the global/chips
+formulation above is identical. Collective bytes are parsed from the
+compiled HLO text (operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, including -start async forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e-class hardware constants (assignment-provided)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_LINE_RE = re.compile(
+    r"=\s*(?P<ret>\([^)]*\)|\S+)\s+(?P<op>" + "|".join(_COLL_OPS) +
+    r")(?:-start)?\((?P<args>[^\n]*?)\)", re.MULTILINE)
+_WHILE_RE = re.compile(
+    r"while\(%?[\w.\-]+\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+    r"(?:[^\n]*?known_trip_count\":{\"n\":\"(\d+)\")?")
+_CALL_RE = re.compile(r"(?:\bcall|\bconditional)\([^\n]*?to_apply=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> instruction text. Headers are non-indented
+    lines '[ENTRY] %name (args) -> type {' (args may nest parens)."""
+    comps: Dict[str, str] = {}
+    cur, buf, entry = None, [], None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        is_header = (stripped.endswith("{") and " -> " in stripped
+                     and not line.startswith(" ") and not line.startswith("}"))
+        if is_header:
+            tok = stripped.split()[1] if stripped.startswith("ENTRY") else stripped.split()[0]
+            cur = tok.lstrip("%")
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            buf = []
+            comps[cur] = ""
+        elif cur is not None:
+            if line.startswith("}"):
+                comps[cur] = "\n".join(buf)
+                cur = None
+            else:
+                buf.append(line)
+    if entry is not None:
+        comps["__entry_name__"] = entry
+    return comps
+
+
+def _comp_multipliers(comps: Dict[str, str]) -> Dict[str, int]:
+    """Execution-count multiplier per computation: while bodies scale by their
+    known_trip_count (nested loops compose). Unknown trips default to 1
+    (undercount is flagged by the caller)."""
+    entry = comps.get("__entry_name__")
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps or name.startswith("__"):
+            return
+        mult[name] = mult.get(name, 0) + m
+        text = comps[name]
+        for wm in _WHILE_RE.finditer(text):
+            cond, body, trip = wm.group(1), wm.group(2), wm.group(3)
+            n = int(trip) if trip else 1
+            visit(body, m * n)
+            visit(cond, m * (n + 1))
+        for cm in _CALL_RE.finditer(text):
+            visit(cm.group(1), m)
+
+    if entry:
+        visit(entry, 1)
+    return mult
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes per collective kind, TRIP-COUNT AWARE:
+    collectives inside scan/while bodies are multiplied by the loop's
+    known_trip_count (XLA emits it in backend_config), composed through
+    nesting. Without this, anything inside scan-over-layers is undercounted
+    by ~n_layers."""
+    out: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    comps = _split_computations(hlo_text)
+    if comps.get("__entry_name__"):
+        mults = _comp_multipliers(comps)
+        items = [(name, comps[name], mults.get(name, 0))
+                 for name in comps if not name.startswith("__")]
+    else:                                   # fallback: flat scan of the text
+        items = [("flat", hlo_text, 1)]
+    for _, text, mult in items:
+        if mult == 0:
+            continue
+        for m in _LINE_RE.finditer(text):
+            op = m.group("op")
+            arg_bytes = _type_bytes(m.group("args"))
+            if arg_bytes == 0:
+                arg_bytes = _type_bytes(m.group("ret"))
+            out[op] += arg_bytes * mult
+            out["count"] += mult
+    return out
+
+
+_INSTR_RE = re.compile(r"^\s+%?([\w.\-]+)\s*=\s*([\w\[\],{}()\s]+?)\s+([a-z][\w\-]*)\(")
+_SHAPE_RE = re.compile(r"^(\w+)\[([\d,]*)\]")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shape(type_str: str):
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def parse_dot_flops(hlo_text: str) -> float:
+    """Per-device matmul FLOPs, TRIP-COUNT AWARE (XLA's cost_analysis counts
+    while bodies once — useless under scan-over-layers). Walks every
+    computation, multiplies each dot's 2*prod(out)*K by its loop multiplier.
+    Elementwise FLOPs are excluded (matmul-dominated workloads; the SSM scan
+    term is added analytically by the cost model)."""
+    comps = _split_computations(hlo_text)
+    if not comps.get("__entry_name__"):
+        return 0.0
+    mults = _comp_multipliers(comps)
+    total = 0.0
+    for name, text in comps.items():
+        if name.startswith("__"):
+            continue
+        mult = mults.get(name, 0)
+        if mult == 0:
+            continue
+        shapes = {}
+        for line in text.splitlines():
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            iname, ret_type, op = im.groups()
+            sh = _parse_shape(ret_type)
+            if sh:
+                shapes[iname] = sh
+            if op == "dot":
+                args = re.search(r"dot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)", line)
+                cd = _DOT_DIMS_RE.search(line)
+                if not (args and cd and sh):
+                    continue
+                lhs = shapes.get(args.group(1))
+                k = 1
+                if lhs and cd.group(1):
+                    for d in cd.group(1).split(","):
+                        if int(d) < len(lhs[1]):
+                            k *= lhs[1][int(d)]
+                out_elems = 1
+                for d in sh[1]:
+                    out_elems *= d
+                total += 2.0 * out_elems * k * mult
+            elif op == "convolution" and sh:
+                kern = re.search(r"window=\{size=([\dx]+)", line)
+                ksize = 1
+                if kern:
+                    for d in kern.group(1).split("x"):
+                        ksize *= int(d)
+                out_elems = 1
+                for d in sh[1]:
+                    out_elems *= d
+                total += 2.0 * out_elems * ksize * mult   # depthwise-style lower bound
+    return total
+
+
+def top_collectives(hlo_text: str, k: int = 12):
+    """The k biggest collectives by bytes x trip-count, with op metadata —
+    the 'profile' used to pick each §Perf iteration's target."""
+    comps = _split_computations(hlo_text)
+    mults = _comp_multipliers(comps) if comps.get("__entry_name__") else {}
+    rows = []
+    for name, text in comps.items():
+        if name.startswith("__"):
+            continue
+        mult = mults.get(name, 0)
+        if mult == 0:
+            continue
+        for m in _LINE_RE.finditer(text):
+            b = _type_bytes(m.group("args")) or _type_bytes(m.group("ret"))
+            meta = re.search(r'op_name="([^"]+)"', text[m.start():m.start() + 1500])
+            rows.append({"op": m.group("op"), "bytes": b * mult, "trips": mult,
+                         "shape": m.group("ret")[:60],
+                         "op_name": (meta.group(1)[:110] if meta else "?")})
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    useful_flops_ratio: float          # MODEL_FLOPS / (flops_per_device * chips)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             collective_bytes_per_device: float, n_chips: int,
+             model_flops_global: float) -> RooflineTerms:
+    c = flops_per_device / PEAK_FLOPS
+    m = bytes_per_device / HBM_BW
+    k = collective_bytes_per_device / ICI_BW
+    dom = max((("compute", c), ("memory", m), ("collective", k)), key=lambda t: t[1])[0]
+    total_flops = flops_per_device * n_chips
+    return RooflineTerms(
+        compute_s=c, memory_s=m, collective_s=k, dominant=dom,
+        flops_per_device=flops_per_device, bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops_global=model_flops_global,
+        useful_flops_ratio=(model_flops_global / total_flops) if total_flops else 0.0)
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6ND (train) / 2ND (inference); D = tokens processed this step."""
+    if shape.kind == "train":
+        return 6.0 * n_params_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_params_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_params_active * shape.global_batch          # decode: 1 tok/seq

@@ -1,0 +1,218 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+Everything here works on ShapeDtypeStructs (jax.eval_shape) so the dry-run
+never allocates a byte of the 314B/671B models. The same builders, fed real
+arrays, are the production train/serve step functions (launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (LMConfig, ShapeSpec, TRAIN_4K, PREFILL_32K,
+                                DECODE_32K, LONG_500K)
+from repro.distributed import sharding as SH
+from repro.distributed.ctx import use_ctx
+from repro.models.lm import encdec as E
+from repro.models.lm import transformer as T
+from repro.train import optimizer as O
+
+SRC_LEN_CAP = 4096        # enc-dec source length for decode cells (DESIGN §5)
+
+
+# ---------------------------------------------------------------------------
+# abstract params / state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: LMConfig):
+    init = E.init_encdec if cfg.is_encoder_decoder else T.init_lm
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+
+
+def make_optimizer(moment_dtype=jnp.float32) -> O.Optimizer:
+    return O.chain_clip(O.adam(O.cosine_decay(3e-4, 100_000, warmup=2000),
+                               moment_dtype=moment_dtype), 1.0)
+
+
+def abstract_train_state(cfg: LMConfig, opt: O.Optimizer):
+    p = abstract_params(cfg)
+    return {"params": p, "opt": jax.eval_shape(opt.init, p)}
+
+
+def train_state_specs(state, cfg: LMConfig, mi: SH.MeshInfo):
+    pspec = SH.param_specs(state["params"], cfg, mi)
+    ospec = {"step": P(),
+             "m": jax.tree_util.tree_map(lambda _: None, state["opt"]["m"]),
+             "v": None}
+    # moments shard exactly like their parameters (ZeRO)
+    ospec["m"] = pspec
+    ospec["v"] = pspec
+    return {"params": pspec, "opt": ospec}
+
+
+# ---------------------------------------------------------------------------
+# batches (abstract)
+# ---------------------------------------------------------------------------
+
+def train_batch_abstract(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if cfg.is_encoder_decoder:
+        return {"src_embeds": sds((b, s, cfg.d_model), bf16),
+                "tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    if cfg.frontend == "vision":
+        st = s - cfg.n_frontend_tokens
+        return {"embeds": sds((b, cfg.n_frontend_tokens, cfg.d_model), bf16),
+                "tokens": sds((b, st), i32), "labels": sds((b, st), i32)}
+    return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+
+
+def prefill_batch_abstract(cfg: LMConfig, shape: ShapeSpec):
+    return train_batch_abstract(cfg, shape)  # same inputs minus labels (kept: unused)
+
+
+def decode_batch_abstract(cfg: LMConfig, shape: ShapeSpec):
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    return {"token": sds((b, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def abstract_caches(cfg: LMConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: E.init_encdec_caches(cfg, b, s, min(s, SRC_LEN_CAP)))
+    return jax.eval_shape(lambda: T.init_caches(cfg, b, s))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: LMConfig, remat: bool = True) -> Callable:
+    if cfg.is_encoder_decoder:
+        def loss_fn(params, batch):
+            return E.encdec_loss(params, cfg, batch["src_embeds"], batch["tokens"],
+                                 batch["labels"], remat=remat)
+    elif cfg.frontend == "vision":
+        def loss_fn(params, batch):
+            return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                             prefix_embeds=batch["embeds"], remat=remat)
+    else:
+        def loss_fn(params, batch):
+            return T.lm_loss(params, cfg, batch["tokens"], batch["labels"], remat=remat)
+    return loss_fn
+
+
+def make_train_step(cfg: LMConfig, opt: O.Optimizer, remat: bool = True) -> Callable:
+    loss_fn = make_loss_fn(cfg, remat)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        params = O.apply_updates(state["params"], updates)
+        return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    return step
+
+
+def make_prefill_step(cfg: LMConfig, shape: ShapeSpec) -> Callable:
+    max_len = shape.seq_len
+
+    if cfg.is_encoder_decoder:
+        def step(params, batch):
+            return E.encdec_prefill(params, cfg, batch["src_embeds"],
+                                    batch["tokens"], max_len)
+    elif cfg.frontend == "vision":
+        def step(params, batch):
+            return T.lm_prefill(params, cfg, batch["tokens"], max_len,
+                                prefix_embeds=batch["embeds"])
+    else:
+        def step(params, batch):
+            return T.lm_prefill(params, cfg, batch["tokens"], max_len)
+    return step
+
+
+def make_decode_step(cfg: LMConfig) -> Callable:
+    if cfg.is_encoder_decoder:
+        def step(params, caches, token, pos):
+            return E.encdec_decode_step(params, cfg, token, caches, pos)
+    else:
+        def step(params, caches, token, pos):
+            return T.lm_decode_step(params, cfg, token, caches, pos)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers (the dry-run entry points)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredCell:
+    lowered: Any
+    kind: str
+
+
+def _shardings(tree_specs, mi: SH.MeshInfo):
+    return jax.tree_util.tree_map(
+        lambda s: mi.named(s) if isinstance(s, P) else mi.named(P()), tree_specs,
+        is_leaf=lambda s: isinstance(s, P) or s is None)
+
+
+def lower_cell(cfg: LMConfig, shape: ShapeSpec, mi: SH.MeshInfo, *,
+               remat: bool = True, moment_dtype=jnp.float32) -> LoweredCell:
+    """Build + .lower() the right step for this (arch x shape) on this mesh."""
+    ctx = mi.ctx()
+    with use_ctx(ctx):
+        if shape.kind == "train":
+            opt = make_optimizer(moment_dtype)
+            state = abstract_train_state(cfg, opt)
+            sspec = _shardings(train_state_specs(state, cfg, mi), mi)
+            batch = train_batch_abstract(cfg, shape)
+            bspec = _shardings(SH.batch_specs(batch, mi), mi)
+            state = jax.tree_util.tree_map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), state, sspec)
+            batch = jax.tree_util.tree_map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), batch, bspec)
+            fn = make_train_step(cfg, opt, remat=remat)
+            lowered = jax.jit(fn, donate_argnums=(0,)).lower(state, batch)
+            return LoweredCell(lowered, "train")
+
+        if shape.kind == "prefill":
+            params = abstract_params(cfg)
+            pspec = _shardings(SH.param_specs(params, cfg, mi), mi)
+            params = jax.tree_util.tree_map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), params, pspec)
+            batch = prefill_batch_abstract(cfg, shape)
+            bspec = _shardings(SH.batch_specs(batch, mi), mi)
+            batch = jax.tree_util.tree_map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), batch, bspec)
+            caches = abstract_caches(cfg, shape)
+            cspec = _shardings(SH.cache_specs(caches, cfg, mi, shape.global_batch), mi)
+            fn = make_prefill_step(cfg, shape)
+            lowered = jax.jit(fn, out_shardings=(None, cspec)).lower(params, batch)
+            return LoweredCell(lowered, "prefill")
+
+        # decode
+        params = abstract_params(cfg)
+        pspec = _shardings(SH.param_specs(params, cfg, mi), mi)
+        params = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), params, pspec)
+        caches = abstract_caches(cfg, shape)
+        cspec = _shardings(SH.cache_specs(caches, cfg, mi, shape.global_batch), mi)
+        caches = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), caches, cspec)
+        db = decode_batch_abstract(cfg, shape)
+        dspec = _shardings(SH.batch_specs(db, mi), mi)
+        db = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), db, dspec)
+        fn = make_decode_step(cfg)
+        lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, caches,
+                                                         db["token"], db["pos"])
+        return LoweredCell(lowered, "decode")

@@ -1,0 +1,111 @@
+"""Training launcher.
+
+Two modes:
+  * ``--arch essr-x4`` (default): the paper's workload — edge-selective SR
+    supernet training (PSNR phase; ``--gan`` adds the perceptual phase),
+    with checkpointing + fault-tolerant supervision.
+  * ``--arch <lm-arch> --smoke``: one real optimizer step of the reduced LM
+    config (full configs are exercised via dryrun.py only).
+
+Example:
+    PYTHONPATH=src python -m repro.launch.train --steps 200 --batch 16
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_essr(args):
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.data.synthetic import patch_batches, random_image, degrade
+    from repro.models.essr import ESSRConfig, init_essr, essr_forward
+    from repro.train import optimizer as O
+    from repro.train.losses import psnr_y
+    from repro.train.trainer import train_essr_supernet
+
+    cfg = ESSRConfig(scale=args.scale)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_essr(key, cfg)
+    data = patch_batches(args.seed, batch=args.batch, lr_patch=args.patch,
+                         scale=args.scale, pool=8, pool_hw=128)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+
+    t0 = time.time()
+    params, ema, hist = train_essr_supernet(
+        params, cfg, data, steps=args.steps,
+        opt=O.lamb(O.cosine_decay(args.lr, args.steps)), seed=args.seed,
+        log_every=max(1, args.steps // 10))
+    print(f"PSNR phase: {args.steps} steps in {time.time()-t0:.1f}s "
+          f"(loss {hist[0]:.4f} -> {np.mean(hist[-10:]):.4f})")
+    ckpt.save(args.steps, {"params": params, "ema": ema}, blocking=True)
+
+    if args.gan_steps:
+        from repro.train.gan import train_essr_gan
+        params, _, ghist = train_essr_gan(params, cfg, data, steps=args.gan_steps,
+                                          seed=args.seed,
+                                          log_every=max(1, args.gan_steps // 5))
+        ckpt.save(args.steps + args.gan_steps, {"params": params, "ema": ema},
+                  blocking=True)
+
+    # eval: PSNR on a held-out synthetic image, per subnet
+    hr = jnp.asarray(random_image(args.seed + 9999, 128, 128))
+    lr = degrade(hr, args.scale)
+    for width in cfg.subnet_widths():
+        sr = essr_forward(ema, lr[None], cfg, width=width)[0]
+        print(f"  eval width={width:2d}: PSNR_Y {float(psnr_y(sr, hr)):.2f} dB")
+    print(f"checkpoints in {args.ckpt_dir}")
+
+
+def train_lm_smoke(args):
+    from repro.configs.registry import get_config
+    from repro.launch import steps as ST
+    cfg = get_config(args.arch, smoke=True)
+    opt = ST.make_optimizer()
+    step = jax.jit(ST.make_train_step(cfg, opt, remat=False))
+    key = jax.random.PRNGKey(0)
+    init = ST.abstract_train_state(cfg, opt)
+    from repro.models.lm import transformer as T
+    from repro.models.lm import encdec as E
+    p = (E.init_encdec if cfg.is_encoder_decoder else T.init_lm)(key, cfg)
+    state = {"params": p, "opt": opt.init(p)}
+    b, s = 2, 32
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.is_encoder_decoder:
+        batch["src_embeds"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.random.normal(key, (b, cfg.n_frontend_tokens, cfg.d_model),
+                                            jnp.bfloat16)
+    for i in range(args.steps):
+        state, metrics = step(state, batch)
+        if i % max(1, args.steps // 5) == 0:
+            print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="essr-x4")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--gan-steps", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--patch", type=int, default=24)
+    ap.add_argument("--scale", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/essr_ckpt")
+    args = ap.parse_args()
+    if args.arch.startswith("essr"):
+        train_essr(args)
+    else:
+        train_lm_smoke(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""ESSR — Edge Selective Super-Resolution network (paper Sec. III, Fig. 8).
+
+Architecture:  BSConv(3->C)  ->  N x SFB(C)  ->  DSConv(C -> 3*scale^2)  ->
+pixel-shuffle.  No global shortcut, no ESA (both removed by the paper's
+hardware-friendly surgery).
+
+SFB (Structure-Friendly Fusion Block, Fig. 14):
+    y = ReLU(BSConv(x)); y = ReLU(BSConv(y)); y = ReLU(Conv1x1(y + x))
+The trailing ReLU is the paper's addition ("enabling zero gating in the
+subsequent BSConv layer").
+
+The network is a *supernet*: ``width`` selects the C54 (full) or C27 (first
+half of every channel dim) subnet — all subnets share weights (Sec. II-B).
+
+Exact parameter counts reproduced (asserted in tests/benchmarks):
+    x4, C=54, 5 SFB, bias:  53 886  (paper Table II: 53.9K)
+    x2, C=54, 5 SFB, bias:  51 906  (paper Table V: 51K)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ESSRConfig:
+    channels: int = 54          # C54 supernet width
+    n_sfb: int = 5              # paper Table II ablation -> 5
+    scale: int = 4              # x2 or x4
+    bias: bool = True
+    in_channels: int = 3
+
+    @property
+    def out_channels(self) -> int:
+        return self.in_channels * self.scale * self.scale
+
+    def subnet_widths(self) -> tuple:
+        """(bilinear, C/2, C) — the paper's trio. width 0 == bilinear."""
+        return (0, self.channels // 2, self.channels)
+
+
+ESSR_X4 = ESSRConfig(scale=4)
+ESSR_X2 = ESSRConfig(scale=2)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_essr(key: jax.Array, cfg: ESSRConfig = ESSR_X4, dtype=jnp.float32) -> Dict[str, Any]:
+    keys = jax.random.split(key, 2 + cfg.n_sfb)
+    params: Dict[str, Any] = {
+        "first": L.init_bsconv(keys[0], cfg.in_channels, cfg.channels, bias=cfg.bias, dtype=dtype),
+        "sfbs": [],
+        "recon": L.init_dsconv(keys[1], cfg.channels, cfg.out_channels, bias=cfg.bias, dtype=dtype),
+    }
+    for i in range(cfg.n_sfb):
+        k1, k2, k3 = jax.random.split(keys[2 + i], 3)
+        sfb = {
+            "b1": L.init_bsconv(k1, cfg.channels, cfg.channels, bias=cfg.bias, dtype=dtype),
+            "b2": L.init_bsconv(k2, cfg.channels, cfg.channels, bias=cfg.bias, dtype=dtype),
+            "fuse": L.conv_init(k3, (1, 1, cfg.channels, cfg.channels), dtype),
+        }
+        if cfg.bias:
+            sfb["fuse_b"] = jnp.zeros((cfg.channels,), dtype)
+        params["sfbs"].append(sfb)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# supernet width slicing (C27 = first-27-channel slice of C54; Sec. II-B)
+# ---------------------------------------------------------------------------
+
+def _slice_bsconv(p: Dict[str, Any], cin: Optional[int], cout: int) -> Dict[str, Any]:
+    out = {
+        "pw": p["pw"][:, :, :cin, :cout] if cin is not None else p["pw"][..., :cout],
+        "dw": p["dw"][..., :cout],
+    }
+    if "pw_b" in p:
+        out["pw_b"] = p["pw_b"][:cout]
+        out["dw_b"] = p["dw_b"][:cout]
+    return out
+
+
+def slice_width(params: Dict[str, Any], width: int) -> Dict[str, Any]:
+    """Return the weight-shared subnet of channel width ``width``.
+
+    Output channel count of the reconstruction DSConv stays full (pixel
+    shuffle needs 3*scale^2 channels) — matching the paper's DSConv(27, 48).
+    """
+    w = width
+    first = _slice_bsconv(params["first"], None, w)     # in stays 3
+    sfbs = []
+    for p in params["sfbs"]:
+        s = {
+            "b1": _slice_bsconv(p["b1"], w, w),
+            "b2": _slice_bsconv(p["b2"], w, w),
+            "fuse": p["fuse"][:, :, :w, :w],
+        }
+        if "fuse_b" in p:
+            s["fuse_b"] = p["fuse_b"][:w]
+        sfbs.append(s)
+    recon = {
+        "dw": params["recon"]["dw"][..., :w],
+        "pw": params["recon"]["pw"][:, :, :w, :],
+    }
+    if "dw_b" in params["recon"]:
+        recon["dw_b"] = params["recon"]["dw_b"][:w]
+        recon["pw_b"] = params["recon"]["pw_b"]
+    return {"first": first, "sfbs": sfbs, "recon": recon}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def sfb_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    y = jax.nn.relu(L.bsconv(p["b1"], x))
+    y = jax.nn.relu(L.bsconv(p["b2"], y))
+    y = L.pointwise(y + x, p["fuse"], p.get("fuse_b"))
+    return jax.nn.relu(y)
+
+
+def essr_forward(params: Dict[str, Any], x: jax.Array, cfg: ESSRConfig = ESSR_X4,
+                 width: Optional[int] = None) -> jax.Array:
+    """x: (N,H,W,3) in [0,1] -> (N,H*s,W*s,3).
+
+    ``width``: None/cfg.channels -> C54 path; cfg.channels//2 -> C27 path;
+    0 -> bilinear interpolation (no conv at all).
+    """
+    if width == 0:
+        return L.bilinear_resize(x, cfg.scale)
+    if width is not None and width != cfg.channels:
+        params = slice_width(params, width)
+    f = L.bsconv(params["first"], x)
+    for p in params["sfbs"]:
+        f = sfb_forward(p, f)
+    up = L.dsconv(params["recon"], f)
+    return L.pixel_shuffle(up, cfg.scale)
+
+
+# ---------------------------------------------------------------------------
+# exact parameter / MAC accounting (paper Tables II, V, VI)
+# ---------------------------------------------------------------------------
+
+def essr_param_count(cfg: ESSRConfig) -> int:
+    c, b = cfg.channels, (1 if cfg.bias else 0)
+    first = cfg.in_channels * c + b * c + 9 * c + b * c
+    sfb = 2 * (c * c + b * c + 9 * c + b * c) + c * c + b * c
+    recon = 9 * c + b * c + c * cfg.out_channels + b * cfg.out_channels
+    return first + cfg.n_sfb * sfb + recon
+
+
+def essr_macs_per_lr_pixel(cfg: ESSRConfig, width: Optional[int] = None) -> int:
+    """Multiply-accumulates per *LR* pixel (bias adds not counted, per convention)."""
+    if width == 0:
+        # bilinear: 4 taps x 3 channels per HR pixel
+        return 4 * cfg.in_channels * cfg.scale * cfg.scale
+    c = width if width is not None else cfg.channels
+    first = cfg.in_channels * c + 9 * c
+    sfb = 2 * (c * c + 9 * c) + c * c
+    recon = 9 * c + c * cfg.out_channels
+    return first + cfg.n_sfb * sfb + recon
+
+
+def essr_macs(cfg: ESSRConfig, lr_hw, width: Optional[int] = None) -> int:
+    return essr_macs_per_lr_pixel(cfg, width) * int(lr_hw[0]) * int(lr_hw[1])

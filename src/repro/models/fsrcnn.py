@@ -1,0 +1,56 @@
+"""FSRCNN baseline (the lightweight backbone the paper's rivals use).
+
+FSRCNN(d=56, s=12, m=4): conv5(1->d) -> conv1(d->s) -> m x conv3(s->s) ->
+conv1(s->d) -> deconv9(d->1, stride=scale). PReLU activations. ~12.5K params
+(paper Tables V/VI list 13K). Operates on the luma channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class FSRCNNConfig:
+    d: int = 56
+    s: int = 12
+    m: int = 4
+    scale: int = 4
+
+
+def _prelu(x, a):
+    return jnp.where(x >= 0, x, a * x)
+
+
+def init_fsrcnn(key, cfg: FSRCNNConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.m + 4)
+    p: Dict[str, Any] = {
+        "feat": {"w": L.conv_init(ks[0], (5, 5, 1, cfg.d)), "b": jnp.zeros(cfg.d), "a": jnp.full(cfg.d, 0.25)},
+        "shrink": {"w": L.conv_init(ks[1], (1, 1, cfg.d, cfg.s)), "b": jnp.zeros(cfg.s), "a": jnp.full(cfg.s, 0.25)},
+        "maps": [],
+        "expand": {"w": L.conv_init(ks[-2], (1, 1, cfg.s, cfg.d)), "b": jnp.zeros(cfg.d), "a": jnp.full(cfg.d, 0.25)},
+        "deconv": {"w": L.conv_init(ks[-1], (9, 9, cfg.d, 1)), "b": jnp.zeros(1)},
+    }
+    for i in range(cfg.m):
+        p["maps"].append({"w": L.conv_init(ks[2 + i], (3, 3, cfg.s, cfg.s)),
+                          "b": jnp.zeros(cfg.s), "a": jnp.full(cfg.s, 0.25)})
+    return p
+
+
+def fsrcnn_forward(params: Dict[str, Any], y: jax.Array, cfg: FSRCNNConfig) -> jax.Array:
+    """y: (N,H,W,1) luma in [0,1] -> (N,H*s,W*s,1)."""
+    t = _prelu(L.conv2d(y, params["feat"]["w"], params["feat"]["b"]), params["feat"]["a"])
+    t = _prelu(L.conv2d(t, params["shrink"]["w"], params["shrink"]["b"]), params["shrink"]["a"])
+    for p in params["maps"]:
+        t = _prelu(L.conv2d(t, p["w"], p["b"]), p["a"])
+    t = _prelu(L.conv2d(t, params["expand"]["w"], params["expand"]["b"]), params["expand"]["a"])
+    s = cfg.scale
+    out = lax.conv_transpose(t, params["deconv"]["w"], strides=(s, s), padding="SAME",
+                             dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + params["deconv"]["b"]

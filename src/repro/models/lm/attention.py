@@ -1,0 +1,382 @@
+"""Attention substrate: RoPE, GQA, MLA (deepseek), blockwise-flash attention.
+
+All attention math is *chunked* (lazy softmax over KV blocks via lax.scan):
+the S x S score matrix is never materialized, which is what makes the 32K
+prefill and 4K x 256 train cells compile-and-fit on the production mesh (and
+on the CPU dry-run host). A Pallas flash kernel is the TPU fast path for the
+same math; the chunked form is the portable/compile-path implementation.
+
+Decode attention is a plain einsum over the cache: under GSPMD a
+sequence-sharded cache is handled with partial-reduction collectives
+(the flash-decoding combine), which we also expose explicitly via shard_map
+in repro/distributed/collectives.py for the hillclimb.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) -> cos/sin of shape (..., head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D//2) or broadcastable (..., S, 1, D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:                      # (S, D/2) -> (1, S, 1, D/2)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) causal attention — pure JAX, scan over KV chunks
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, chunk: int = 512,
+                        q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Sk,G,D) with H = n*G (GQA). Lazy softmax:
+    O(Sq*chunk) live memory instead of O(Sq*Sk)."""
+    b, sq, h, d = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                   # MLA: d_v != d_qk
+    rep = h // g
+    scale = d ** -0.5
+    nc = -(-sk // chunk)
+    pad = nc * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nc, chunk, g, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, g, dv).transpose(1, 0, 2, 3, 4)
+    qh = q.reshape(b, sq, g, rep, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, blk):
+        m, l, o = carry
+        kb, vb, ci = blk                                   # (B,C,G,D), (B,C,G,D), ()
+        s = jnp.einsum("bqgrd,bcgd->bqgrc", qh, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else (kv_pos[None, :] < sk)
+        mask = mask & (kv_pos[None, :] < sk)               # padding mask
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqgrc,bcgd->bqgrd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, g, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, g, rep), jnp.float32)
+    o0 = jnp.zeros((b, sq, g, rep, dv), jnp.float32)
+    # K/V stream through the scan in their model precision (bf16 for the
+    # production configs — halves TP resharding bytes vs the f32 baseline);
+    # scores/accumulators stay f32 via preferred_element_type (§Perf D3).
+    kvdt = k.dtype
+    (m, l, o), _ = lax.scan(body, (m0, l0, o0),
+                            (kc.astype(kvdt), vc.astype(kvdt),
+                             jnp.arange(nc)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-token attention over a (possibly sequence-sharded) cache.
+
+    q: (B,1,H,D); caches: (B,S,G,D); length: () current cache fill."""
+    b, _, h, d = q.shape
+    s, g = k_cache.shape[1], k_cache.shape[2]
+    rep = h // g
+    qh = q.reshape(b, g, rep, d)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * d ** -0.5
+    mask = jnp.arange(s)[None, None, None, :] < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, g = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": (std * jax.random.normal(ks[0], (d, h * hd))).astype(dtype),
+        "wk": (std * jax.random.normal(ks[1], (d, g * hd))).astype(dtype),
+        "wv": (std * jax.random.normal(ks[2], (d, g * hd))).astype(dtype),
+        "wo": (std * jax.random.normal(ks[3], (h * hd, d))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((g * hd,), dtype)
+        p["bv"] = jnp.zeros((g * hd,), dtype)
+    return p
+
+
+def gqa_qkv(p, x: jax.Array, cfg: LMConfig, positions: jax.Array):
+    b, s, _ = x.shape
+    hd, h, g = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, s, h, hd)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, s, g, hd)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, s, g, hd)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_self_attention(p, x: jax.Array, cfg: LMConfig, *, causal: bool = True,
+                       q_offset: int = 0) -> jax.Array:
+    s = x.shape[1]
+    positions = q_offset + jnp.arange(s)
+    q, k, v = gqa_qkv(p, x, cfg, positions)
+    o = blockwise_attention(q, k, v, causal=causal, chunk=min(cfg.attn_chunk, s),
+                            q_offset=q_offset)
+    return o.reshape(x.shape[0], s, -1) @ p["wo"]
+
+
+def gqa_decode(p, x: jax.Array, cfg: LMConfig, cache: Dict[str, jax.Array],
+               pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,1,D); cache: {'k','v'}: (B,S,G,hd); pos: () int32 fill count."""
+    b = x.shape[0]
+    q, k, v = gqa_qkv(p, x, cfg, pos[None] if pos.ndim == 0 else pos)
+    k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    return o.reshape(b, 1, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank q/kv + decoupled RoPE; absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    n = lambda i, shape, s=std: (s * jax.random.normal(ks[i], shape)).astype(dtype)
+    return {
+        "wdq": n(0, (d, qr)),                       # q down
+        "q_norm": jnp.ones((qr,), dtype),
+        "wuq": n(1, (qr, h * (dn + dr)), qr ** -0.5),   # q up (nope+rope)
+        "wdkv": n(2, (d, kr)),                      # kv down (the cached latent)
+        "kv_norm": jnp.ones((kr,), dtype),
+        "wukv": n(3, (kr, h * (dn + dv)), kr ** -0.5),  # kv up
+        "wkr": n(4, (d, dr)),                       # shared rope key
+        "wo": n(5, (h * dv, d)),
+    }
+
+
+def _mla_qkr(p, x, cfg: LMConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope((x @ p["wkr"]).reshape(b, s, 1, dr), cos, sin)
+    return q_nope, q_rope, k_rope
+
+
+def mla_blockwise_attention_lazy(q_nope, q_rope, c_kv, k_rope, wukv, cfg: LMConfig, *,
+                                 chunk: int = 512, q_offset: int = 0) -> jax.Array:
+    """§Perf D4 (REFUTED — kept for the record): lazy per-chunk K/V expansion
+    from the latent. Napkin math predicted a 4x collective win (the latent is
+    43x smaller than reconstructed K/V); measured, GSPMD re-sharded the
+    in-loop expansion and the step REGRESSED 107.6s -> 453.5s (all-gather
+    2.9 TB -> 19 TB/device). Default path is mla_blockwise_attention below;
+    enable this with --opts mla_lazy to reproduce the refutation."""
+    b, sq, h, dn = q_nope.shape
+    sk = c_kv.shape[1]
+    dr = q_rope.shape[-1]
+    kr = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+    nc = -(-sk // chunk)
+    pad = nc * chunk - sk
+    if pad:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    ckvc = c_kv.reshape(b, nc, chunk, kr).transpose(1, 0, 2, 3)
+    krc = k_rope.reshape(b, nc, chunk, dr).transpose(1, 0, 2, 3)
+    q_pos = q_offset + jnp.arange(sq)
+    kvdt = c_kv.dtype
+    qn = q_nope.astype(kvdt)
+    qr = q_rope.astype(kvdt)
+    w_uk = wukv.reshape(kr, h, dn + dv)[..., :dn]
+    w_uv = wukv.reshape(kr, h, dn + dv)[..., dn:]
+
+    def body(carry, blk):
+        m, l, o = carry
+        ckvb, krb, ci = blk
+        kb = jnp.einsum("bcr,rhd->bchd", ckvb, w_uk)          # lazy K expansion
+        vb = jnp.einsum("bcr,rhd->bchd", ckvb, w_uv)          # lazy V expansion
+        s = jnp.einsum("bqhd,bchd->bqhc", qn, kb,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bqhr,bcr->bqhc", qr, krb,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < sk)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pexp.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", pexp.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    o0 = jnp.zeros((b, sq, h, dv), jnp.float32)
+    (m, l, o), _ = lax.scan(body, (m0, l0, o0),
+                            (ckvc, krc.astype(kvdt), jnp.arange(nc)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q_nope.dtype)
+
+
+def mla_blockwise_attention(q_nope, q_rope, k_nope, k_rope, v, *,
+                            chunk: int = 512, q_offset: int = 0) -> jax.Array:
+    """Blockwise attention with MLA's decoupled score (§Perf D2, the winner):
+        s = q_nope.k_nope (per-head) + q_rope.k_rope (HEAD-SHARED).
+    The rope term contracts the shared (B,S,dr) key directly — it never
+    materializes broadcast_to(k_rope, heads), which forced an all-gather of
+    K over the head axis (366 GB x 488 per step measured before D2)."""
+    b, sq, h, dn = q_nope.shape
+    sk = k_nope.shape[1]
+    dv = v.shape[-1]
+    dr = q_rope.shape[-1]
+    scale = (dn + dr) ** -0.5
+    nc = -(-sk // chunk)
+    pad = nc * chunk - sk
+    if pad:
+        k_nope = jnp.pad(k_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k_nope.reshape(b, nc, chunk, h, dn).transpose(1, 0, 2, 3, 4)
+    krc = k_rope.reshape(b, nc, chunk, dr).transpose(1, 0, 2, 3)
+    vc = v.reshape(b, nc, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+    kvdt = k_nope.dtype
+    qn = q_nope.astype(kvdt)
+    qr = q_rope.astype(kvdt)
+
+    def body(carry, blk):
+        m, l, o = carry
+        kb, krb, vb, ci = blk
+        s = jnp.einsum("bqhd,bchd->bqhc", qn, kb,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bqhr,bcr->bqhc", qr, krb,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < sk)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pexp.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", pexp.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    o0 = jnp.zeros((b, sq, h, dv), jnp.float32)
+    (m, l, o), _ = lax.scan(body, (m0, l0, o0),
+                            (kc, krc.astype(kvdt), vc, jnp.arange(nc)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q_nope.dtype)
+
+
+def mla_self_attention(p, x: jax.Array, cfg: LMConfig, *, q_offset: int = 0) -> jax.Array:
+    """Prefill/train path. Default (D2): reconstruct per-head K/V from the
+    latent once, head-shared rope key. cfg.mla_lazy_kv selects the refuted
+    D4 lazy-expansion variant (kept for reproducibility)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = q_offset + jnp.arange(s)
+    q_nope, q_rope, k_rope = _mla_qkr(p, x, cfg, positions)
+    c_kv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+    if cfg.mla_lazy_kv:
+        o = mla_blockwise_attention_lazy(q_nope, q_rope, c_kv, k_rope[:, :, 0],
+                                         p["wukv"], cfg,
+                                         chunk=min(cfg.attn_chunk, s),
+                                         q_offset=q_offset)
+    else:
+        kv = (c_kv @ p["wukv"]).reshape(b, s, h, dn + dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        o = mla_blockwise_attention(q_nope, q_rope, k_nope, k_rope[:, :, 0], v,
+                                    chunk=min(cfg.attn_chunk, s),
+                                    q_offset=q_offset)
+    return o.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+
+
+def mla_decode(p, x: jax.Array, cfg: LMConfig, cache: Dict[str, jax.Array],
+               pos: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed decode: scores/outputs computed in the 512-dim latent space —
+    the cache stays (B, S, kv_lora_rank + rope_dim), never expanded to heads."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, kr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope, k_rope = _mla_qkr(p, x, cfg, pos[None])
+    c_kv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)      # (B,1,kr)
+    ckv_cache = lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+    kr_cache = lax.dynamic_update_slice(cache["kr"], k_rope[:, :, 0].astype(cache["kr"].dtype), (0, pos, 0))
+
+    wukv = p["wukv"].reshape(kr, h, dn + dv)
+    w_uk, w_uv = wukv[..., :dn], wukv[..., dn:]                    # (kr,h,dn),(kr,h,dv)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)         # absorb W_uk
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    scores = (s_lat + s_rope) * scale
+    mask = jnp.arange(scores.shape[-1])[None, None, :] <= pos
+    scores = jnp.where(mask, scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pattn, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))  # absorb W_uv
+    out = o.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return out, {"ckv": ckv_cache, "kr": kr_cache}

@@ -1,0 +1,173 @@
+"""Encoder-decoder stack (seamless-m4t backbone; [audio] frontend is a stub —
+``input_specs`` supplies precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional GQA blocks (scan). Decoder: causal self-attention +
+cross-attention + MLP (scan). Decode caches = per-layer self-attn K/V plus
+the cross-attn K/V precomputed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.models.lm import attention as A
+from repro.models.lm import ffn as F
+from repro.models.lm.transformer import chunked_ce
+
+
+def _init_cross(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, g = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {"wq": (std * jax.random.normal(ks[0], (d, h * hd))).astype(dtype),
+            "wk": (std * jax.random.normal(ks[1], (d, g * hd))).astype(dtype),
+            "wv": (std * jax.random.normal(ks[2], (d, g * hd))).astype(dtype),
+            "wo": (std * jax.random.normal(ks[3], (h * hd, d))).astype(dtype)}
+
+
+def init_encdec(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+                "attn": A.init_gqa(k1, cfg, dtype),
+                "mlp": F.init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((d,), dtype), "lnx": jnp.ones((d,), dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "attn": A.init_gqa(k1, cfg, dtype),
+                "cross": _init_cross(k2, cfg, dtype),
+                "mlp": F.init_mlp(k3, d, cfg.d_ff, cfg.act, dtype)}
+
+    return {
+        "enc_layers": jax.vmap(enc_block)(jax.random.split(ks[0], cfg.n_encoder_layers)),
+        "dec_layers": jax.vmap(dec_block)(jax.random.split(ks[1], cfg.n_layers)),
+        "embed": (d ** -0.5 * jax.random.normal(ks[2], (cfg.vocab_padded, d))).astype(dtype),
+        "enc_norm": jnp.ones((d,), dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": (d ** -0.5 * jax.random.normal(ks[3], (d, cfg.vocab_padded))).astype(dtype),
+    }
+
+
+def encode(params, cfg: LMConfig, src_embeds: jax.Array, *, remat: bool = True) -> jax.Array:
+    x = src_embeds.astype(params["embed"].dtype)
+
+    def body(x, lp):
+        h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + A.gqa_self_attention(lp["attn"], h, cfg, causal=False)
+        h = A.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + F.mlp(lp["mlp"], h, cfg.act), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(fn, x, params["enc_layers"])
+    return A.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(cp, x, enc, cfg: LMConfig):
+    b, s, _ = x.shape
+    hd, h, g = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ cp["wq"]).reshape(b, s, h, hd)
+    k = (enc @ cp["wk"]).reshape(b, enc.shape[1], g, hd)
+    v = (enc @ cp["wv"]).reshape(b, enc.shape[1], g, hd)
+    o = A.blockwise_attention(q, k, v, causal=False, chunk=min(cfg.attn_chunk, enc.shape[1]))
+    return o.reshape(b, s, -1) @ cp["wo"]
+
+
+def decode_train(params, cfg: LMConfig, enc: jax.Array, tokens: jax.Array,
+                 *, remat: bool = True) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + A.gqa_self_attention(lp["attn"], h, cfg, causal=True)
+        h = A.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attend(lp["cross"], h, enc, cfg)
+        h = A.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + F.mlp(lp["mlp"], h, cfg.act), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(fn, x, params["dec_layers"])
+    return A.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: LMConfig, src_embeds, tokens, labels, *,
+                remat: bool = True) -> jax.Array:
+    enc = encode(params, cfg, src_embeds, remat=remat)
+    h = decode_train(params, cfg, enc, tokens, remat=remat)
+    return chunked_ce(h, params["lm_head"], labels)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def encdec_prefill(params, cfg: LMConfig, src_embeds, tokens, max_len: int
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    enc = encode(params, cfg, src_embeds, remat=False)
+    b, s = tokens.shape
+    hd, g = cfg.resolved_head_dim, cfg.n_kv_heads
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        _, k, v = A.gqa_qkv(lp["attn"], h, cfg, jnp.arange(s))
+        x = x + A.gqa_self_attention(lp["attn"], h, cfg, causal=True)
+        h = A.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _cross_attend(lp["cross"], h, enc, cfg)
+        h = A.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + F.mlp(lp["mlp"], h, cfg.act)
+        ck = (enc @ lp["cross"]["wk"]).reshape(b, enc.shape[1], g, hd)
+        cv = (enc @ lp["cross"]["wv"]).reshape(b, enc.shape[1], g, hd)
+        cache = {"k": jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0))),
+                 "ck": ck, "cv": cv}
+        return x, cache
+
+    x, caches = lax.scan(body, x, params["dec_layers"])
+    h = A.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    return logits, caches
+
+
+def init_encdec_caches(cfg: LMConfig, batch: int, max_len: int, src_len: int,
+                       dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L, hd, g = cfg.n_layers, cfg.resolved_head_dim, cfg.n_kv_heads
+    return {"k": jnp.zeros((L, batch, max_len, g, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, g, hd), dtype),
+            "ck": jnp.zeros((L, batch, src_len, g, hd), dtype),
+            "cv": jnp.zeros((L, batch, src_len, g, hd), dtype)}
+
+
+def encdec_decode_step(params, cfg: LMConfig, token, caches, pos
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(x, inp):
+        lp, cache_l = inp
+        h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        o, new_kv = A.gqa_decode(lp["attn"], h, cfg, {"k": cache_l["k"], "v": cache_l["v"]}, pos)
+        x = x + o
+        h = A.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        b = x.shape[0]
+        hd, hh, g = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        q = (h @ lp["cross"]["wq"]).reshape(b, 1, hh, hd)
+        o = A.decode_attention(q, cache_l["ck"], cache_l["cv"],
+                               jnp.asarray(cache_l["ck"].shape[1]))
+        x = x + o.reshape(b, 1, -1) @ lp["cross"]["wo"]
+        h = A.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + F.mlp(lp["mlp"], h, cfg.act)
+        return x, {"k": new_kv["k"], "v": new_kv["v"], "ck": cache_l["ck"], "cv": cache_l["cv"]}
+
+    x, new_caches = lax.scan(body, x, (params["dec_layers"], caches))
+    h = A.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_caches

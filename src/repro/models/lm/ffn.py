@@ -1,0 +1,187 @@
+"""FFN substrate: dense (gated) MLP, MoE, and the ESSR-style dynamic-width FFN.
+
+MoE uses capacity-based dispatch written as gather/scatter einsum math under
+jit: the SAME lowering serves both parallelism modes — which mode you get is
+purely a function of the expert-weight PartitionSpec (DESIGN.md §6):
+
+  * expert_tp   (grok-1, E=8):   experts replicated, expert hidden dim TP'd
+                                 over 'model' (all-reduce combine);
+  * ep_alltoall (deepseek, E=256): experts sharded over 'model'; GSPMD turns
+                                 the dispatch scatter into all-to-alls. The
+                                 explicit shard_map variant is the §Perf
+                                 hillclimb comparison point.
+
+Dynamic-width FFN = the paper's edge-selective subnet idea transplanted:
+per-token "edge score" (RMS of the pre-FFN hidden state) routes the top
+``capacity`` tokens through the full-width FFN and the rest through the
+weight-shared half-width slice (C54 vs C27, ARM-style shared weights).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed import ctx as shard
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, act: str, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {"w_in": (std_in * jax.random.normal(ks[0], (d, f))).astype(dtype),
+         "w_out": (std_out * jax.random.normal(ks[1], (f, d))).astype(dtype)}
+    if act != "relu2":                       # gated (SwiGLU-family)
+        p["w_gate"] = (std_in * jax.random.normal(ks[2], (d, f))).astype(dtype)
+    return p
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, act: str) -> jax.Array:
+    a = _act(act)
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = h * a(x @ p["w_gate"])
+    else:
+        h = a(h)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity dispatch, einsum/gather-scatter form)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (std_in * jax.random.normal(ks[0], (d, e))).astype(jnp.float32),
+        "w_in": (std_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "w_gate": (std_in * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "w_out": (std_out * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts, cfg.act, dtype)
+    return p
+
+
+def moe_capacity(n_tokens: int, cfg: LMConfig) -> int:
+    c = int(n_tokens * cfg.n_experts_per_tok * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)            # pad to 8 for TPU sublane alignment
+
+
+def moe_forward(p: Dict[str, Any], x: jax.Array, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out, aux_loss). Top-k, capacity-dropped, softmax-weighted."""
+    if cfg.moe_impl == "shard_map":
+        c = shard.current()
+        if c is not None:
+            from repro.distributed.moe import moe_forward_shardmap
+            return moe_forward_shardmap(p, x, cfg, c.mesh, c.resolve("dp"), c.mp)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)
+    aux = e * jnp.mean(density * jnp.mean(probs, axis=0))
+
+    # capacity assignment: position of each (token, slot) within its expert
+    cap = moe_capacity(t, cfg)
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (T*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), flat_e[:, None], axis=1)[:, 0] - 1
+    valid = pos < cap
+    slot = jnp.where(valid, flat_e * cap + pos, e * cap)      # drops -> scratch row
+
+    tok = jnp.repeat(jnp.arange(t), k)
+    disp = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(xf[tok] * valid[:, None])
+    disp = disp[:-1].reshape(e, cap, d)
+    # EP: experts over 'model' (GSPMD turns the scatter into all-to-alls);
+    # expert-TP: dispatch replicated over 'model', hidden dim TP'd via w specs.
+    ep = "mp" if cfg.moe_mode == "ep_alltoall" else None
+    if cfg.moe_dispatch_token_shard:
+        # §Perf G1/D2: shard the CAPACITY dim over dp. Without this the
+        # expert einsum contracts over the FSDP-sharded d of a replicated
+        # dispatch buffer -> per-layer TB-scale partial-sum all-reduces
+        # (measured in EXPERIMENTS.md §Perf); with it, GSPMD all-gathers the
+        # (much smaller) expert weights instead — ZeRO-3 semantics.
+        disp = shard.constrain(disp, ep, "dp", None)
+    else:
+        disp = shard.constrain(disp, ep, None, None)
+
+    a = _act(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", disp, p["w_in"])
+    h = h * a(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]))
+    if cfg.moe_dispatch_token_shard:
+        h = shard.constrain(h, ep, "dp", "mp" if ep is None else None)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_out"]).reshape(e * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+
+    w = (gate.reshape(-1) * valid).astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(y[slot] * w[:, None])
+    if "shared" in p:
+        out = out + mlp(p["shared"], xf, cfg.act)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# ESSR-style dynamic-width FFN (the paper's technique, generalized)
+# ---------------------------------------------------------------------------
+
+def token_edge_score(x: jax.Array) -> jax.Array:
+    """The LM analog of the paper's edge score: token 'difficulty' as the RMS
+    of the pre-FFN hidden state (cheap, input-derived, no learned router)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1))
+
+
+def dynamic_width_ffn(p: Dict[str, Any], x: jax.Array, act: str,
+                      capacity_frac: float = 0.5) -> jax.Array:
+    """Top-``capacity`` tokens by edge score -> full width; the rest -> the
+    weight-shared half-width slice (the C54/C27 duality, static shapes)."""
+    b, s, d = x.shape
+    t = b * s
+    f = p["w_in"].shape[-1]
+    fh = f // 2
+    xf = x.reshape(t, d)
+    score = token_edge_score(xf)
+    n_full = max(1, int(t * capacity_frac))
+    _, order = jax.lax.top_k(score, t)                        # descending
+    full_idx, half_idx = order[:n_full], order[n_full:]
+
+    def run(idx, sl):
+        xi = xf[idx]
+        h = xi @ p["w_in"][:, :sl]
+        if "w_gate" in p:
+            h = h * _act(act)(xi @ p["w_gate"][:, :sl])
+        else:
+            h = _act(act)(h)
+        return h @ p["w_out"][:sl, :]
+
+    out = jnp.zeros((t, d), x.dtype)
+    out = out.at[full_idx].set(run(full_idx, f))
+    if t - n_full > 0:
+        out = out.at[half_idx].set(run(half_idx, fh))
+    return out.reshape(b, s, d)

@@ -1,0 +1,335 @@
+"""SSM substrate: Mamba-1 selective scan (falcon-mamba) and Mamba-2/SSD
+(zamba2), both in *chunked* form.
+
+Chunking is the TPU adaptation of the CUDA selective-scan kernel: within a
+chunk the first-order recurrence is a lax.associative_scan (parallel,
+VPU-friendly); across chunks a lax.scan carries the (B, d, N) state. Live
+memory is O(chunk * d * N), independent of sequence length — which is what
+makes the 512K long-context cell compile. Decode is an O(1) single-token
+state update (the "KV cache" of an SSM is its state — constant in seq_len).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+
+
+def _assoc_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B,S,C); w: (k,C); returns (y, new_state)
+    where state carries the last k-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return y + b, xp[:, -(k - 1):, :]
+
+
+# ===========================================================================
+# Mamba-1 (falcon-mamba-7b)
+# ===========================================================================
+
+def init_mamba1(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    d, di, n, r, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "in_proj": (std * jax.random.normal(ks[0], (d, 2 * di))).astype(dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (k, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (di ** -0.5 * jax.random.normal(ks[2], (di, r + 2 * n))).astype(dtype),
+        "dt_proj": (r ** -0.5 * jax.random.normal(ks[3], (r, di))).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[4], (di,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (di ** -0.5 * jax.random.normal(ks[5], (di, d))).astype(dtype),
+    }
+
+
+def _scan_chunked(a_fn, b_fn, y_fn, h0, n_chunks):
+    """Generic chunked linear recurrence: chunk i provides elementwise decay
+    a and input b; within-chunk via associative_scan, across via lax.scan."""
+    def body(h, i):
+        a, b = a_fn(i), b_fn(i)
+        ac, bc = lax.associative_scan(_assoc_combine, (a, b), axis=1)
+        h_all = ac * h[:, None] + bc                   # states at every step
+        y = y_fn(i, h_all)
+        return h_all[:, -1], y
+    return lax.scan(body, h0, jnp.arange(n_chunks))
+
+
+def mamba1_forward(p: Dict[str, Any], u: jax.Array, cfg: LMConfig,
+                   return_state: bool = False):
+    """u: (B,S,D) -> (B,S,D) [, final {'h','conv'} state]. Chunked scan.
+    Padded tail steps get dt=0 (identity state update) so the returned state
+    is exact regardless of S % chunk."""
+    bsz, s, _ = u.shape
+    di, n, r, ck = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_chunk
+    xz = u @ p["in_proj"]
+    x_raw, z = xz[..., :di], xz[..., di:]
+    x, conv_state = _causal_conv(x_raw, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"] + p["dt_bias"])   # (B,S,di)
+    Bm, Cm = proj[..., r:r + n], proj[..., r + n:]                       # (B,S,n)
+    A = -jnp.exp(p["A_log"])                                             # (di,n)
+
+    pad = (-s) % ck
+    if pad:
+        x, dt = jnp.pad(x, ((0, 0), (0, pad), (0, 0))), jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm, Cm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))), jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // ck
+    xc = x.reshape(bsz, nc, ck, di)
+    dtc = dt.reshape(bsz, nc, ck, di).astype(jnp.float32)
+    Bc = Bm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+    Cc = Cm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+
+    def a_fn(i):
+        return jnp.exp(dtc[:, i, :, :, None] * A)                        # (B,ck,di,n)
+
+    def b_fn(i):
+        return (dtc[:, i] * xc[:, i].astype(jnp.float32))[..., None] * Bc[:, i, :, None, :]
+
+    def y_fn(i, h_all):                                                  # (B,ck,di,n)
+        return jnp.einsum("bkdn,bkn->bkd", h_all, Cc[:, i])
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_final, ys = _scan_chunked(a_fn, b_fn, y_fn, h0, nc)                # (nc,B,ck,di)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, nc * ck, di)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z[:, :s].astype(jnp.float32))).astype(u.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_final, "conv": x_raw[:, -(cfg.ssm_conv - 1):, :]}
+    return out
+
+
+def mamba1_init_cache(cfg: LMConfig, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {"h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)}
+
+
+def mamba1_decode(p, u, cfg: LMConfig, cache):
+    """u: (B,1,D); O(1) state update."""
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = u @ p["in_proj"]
+    x, z = xz[..., :di], xz[..., di:]
+    x, conv_state = _causal_conv(x, p["conv_w"], p["conv_b"], cache["conv"])
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"] + p["dt_bias"])[:, 0].astype(jnp.float32)
+    Bm = proj[:, 0, r:r + n].astype(jnp.float32)
+    Cm = proj[:, 0, r + n:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    xf = x[:, 0].astype(jnp.float32)
+    h = jnp.exp(dt[..., None] * A) * cache["h"] + (dt * xf)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xf * p["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(u.dtype)
+    return (y @ p["out_proj"])[:, None], {"h": h, "conv": conv_state}
+
+
+# ===========================================================================
+# Mamba-2 / SSD (zamba2)
+# ===========================================================================
+
+def init_mamba2(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Projections are stored SPLIT (w_z/w_x/w_bc/w_dt + per-part convs)
+    instead of HF's merged in_proj/conv (§Perf Z4): the merged layout's
+    output slices straddle shard boundaries, forcing mp-replicated compute;
+    split, the z/x/head dims TP cleanly (depthwise conv splits exactly)."""
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    heads = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "w_z": (std * jax.random.normal(ks[0], (d, di))).astype(dtype),
+        "w_x": (std * jax.random.normal(ks[1], (d, di))).astype(dtype),
+        "w_bc": (std * jax.random.normal(ks[2], (d, 2 * n))).astype(dtype),
+        "w_dt": (std * jax.random.normal(ks[3], (d, heads))).astype(dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[4], (k, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_w_bc": (0.1 * jax.random.normal(ks[5], (k, 2 * n))).astype(dtype),
+        "conv_b_bc": jnp.zeros((2 * n,), dtype),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads).astype(jnp.float32)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": (di ** -0.5 * jax.random.normal(ks[3], (di, d))).astype(dtype),
+    }
+
+
+def _mamba2_split(p, u, cfg: LMConfig):
+    z = u @ p["w_z"]
+    x = u @ p["w_x"]
+    bc = u @ p["w_bc"]
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, x, bc, dt
+
+
+def mamba2_ssd_forward(p: Dict[str, Any], u: jax.Array, cfg: LMConfig,
+                       return_state: bool = False):
+    """Mamba-2 via the SSD block-matmul form (§Perf Z1).
+
+    The chunked associative scan materializes (B,chunk,H,P,N) — 34 GB/device
+    for zamba2's train_4k cell. SSD reformulates the intra-chunk recurrence
+    as causal-masked matmuls:  Y = ((C Bᵀ) ⊙ decay) @ (dt⊙x) + C·(decay·S),
+    with only the (B,H,K,K) kernel and (B,H,P,N) states live — ~50x less
+    memory, and the FLOPs move from the VPU to the MXU.
+    """
+    bsz, s, _ = u.shape
+    di, n, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_chunk
+    hds = cfg.ssm_head_dim
+    heads = di // hds
+    z, x_raw, bc_raw, dt = _mamba2_split(p, u, cfg)
+    x, _ = _causal_conv(x_raw, p["conv_w"], p["conv_b"])
+    bc, _ = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+
+    pad = (-s) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // ck
+    xh = x.reshape(bsz, nc, ck, heads, hds).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, ck, heads)                             # f32 already
+    Bc = Bm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+    Cc = Cm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((ck, ck), bool))
+
+    def chunk(S, i):
+        dti, xi, Bi, Ci = dtc[:, i], xh[:, i], Bc[:, i], Cc[:, i]
+        a = dti * A                                                  # (B,K,H) logs
+        ca = jnp.cumsum(a, axis=1)
+        dtx = dti[..., None] * xi                                    # (B,K,H,P)
+        # intra-chunk: ((C Bᵀ) ⊙ exp(ca_i - ca_j) ⊙ causal) @ dtx
+        cb = jnp.einsum("bin,bjn->bij", Ci, Bi)                      # (B,K,K)
+        decay = jnp.exp(ca[:, :, None, :] - ca[:, None, :, :])       # (B,K,K,H)
+        kern = cb[..., None] * jnp.where(causal[None, :, :, None], decay, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", kern, dtx)
+        # inter-chunk: carry-in state decayed to step i
+        y = y + jnp.exp(ca)[..., None] * jnp.einsum("bin,bhpn->bihp", Ci, S)
+        # state update
+        tail = jnp.exp(ca[:, -1:, :] - ca)                           # (B,K,H)
+        S_new = (jnp.exp(ca[:, -1])[:, :, None, None] * S
+                 + jnp.einsum("bkhp,bkn->bhpn", tail[..., None] * dtx, Bi))
+        return S_new, y
+
+    S0 = jnp.zeros((bsz, heads, hds, n), jnp.float32)
+    S_final, ys = lax.scan(chunk, S0, jnp.arange(nc))                # (nc,B,K,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * ck, heads, hds)[:, :s]
+    y = y + xh.reshape(bsz, nc * ck, heads, hds)[:, :s] * p["D"][:, None]
+    y = y.reshape(bsz, s, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    from repro.models.lm.attention import rmsnorm
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"h": S_final, "conv": x_raw[:, -(cfg.ssm_conv - 1):, :],
+                     "conv_bc": bc_raw[:, -(cfg.ssm_conv - 1):, :]}
+    return out
+
+
+def mamba2_forward(p: Dict[str, Any], u: jax.Array, cfg: LMConfig,
+                   return_state: bool = False):
+    if cfg.mamba2_impl == "ssd":
+        return mamba2_ssd_forward(p, u, cfg, return_state)
+    bsz, s, _ = u.shape
+    di, n, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_chunk
+    hds = cfg.ssm_head_dim
+    heads = di // hds
+    z, x_raw, bc_raw, dt = _mamba2_split(p, u, cfg)
+    x, _ = _causal_conv(x_raw, p["conv_w"], p["conv_b"])
+    bc, _ = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+    A = -jnp.exp(p["A_log"])                                             # (H,)
+
+    pad = (-s) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // ck
+    xh = x.reshape(bsz, nc, ck, heads, hds).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, ck, heads)
+    Bc = Bm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+    Cc = Cm.reshape(bsz, nc, ck, n).astype(jnp.float32)
+
+    def a_fn(i):
+        return jnp.exp(dtc[:, i] * A)[..., None, None]                   # (B,ck,H,1,1)
+
+    def b_fn(i):
+        return (dtc[:, i][..., None, None] * xh[:, i][..., None]
+                * Bc[:, i, :, None, None, :])                            # (B,ck,H,P,n)
+
+    def y_fn(i, h_all):
+        return jnp.einsum("bkhpn,bkn->bkhp", h_all, Cc[:, i])
+
+    h0 = jnp.zeros((bsz, heads, hds, n), jnp.float32)
+    h_final, ys = _scan_chunked(a_fn, b_fn, y_fn, h0, nc)                # (nc,B,ck,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * ck, heads, hds)[:, :s]
+    y = y + xh.reshape(bsz, nc * ck, heads, hds)[:, :s] * p["D"][:, None]
+    y = y.reshape(bsz, s, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    from repro.models.lm.attention import rmsnorm
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_final, "conv": x_raw[:, -(cfg.ssm_conv - 1):, :],
+                     "conv_bc": bc_raw[:, -(cfg.ssm_conv - 1):, :]}
+    return out
+
+
+def mamba2_init_cache(cfg: LMConfig, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = di // cfg.ssm_head_dim
+    return {"h": jnp.zeros((batch, heads, cfg.ssm_head_dim, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+            "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * n), dtype)}
+
+
+def mamba2_decode(p, u, cfg: LMConfig, cache):
+    di, n = cfg.d_inner, cfg.ssm_state
+    hds = cfg.ssm_head_dim
+    heads = di // hds
+    z, x_raw, bc_raw, dt = _mamba2_split(p, u, cfg)
+    x, conv_state = _causal_conv(x_raw, p["conv_w"], p["conv_b"], cache["conv"])
+    bc, conv_bc_state = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"], cache["conv_bc"])
+    x = jax.nn.silu(x)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+    A = -jnp.exp(p["A_log"])
+    xf = x[:, 0].reshape(-1, heads, hds).astype(jnp.float32)
+    dt1 = dt[:, 0]                                                       # (B,H)
+    Bf, Cf = Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)
+    a = jnp.exp(dt1 * A)[..., None, None]
+    h = a * cache["h"] + (dt1[..., None, None] * xf[..., None]) * Bf[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + xf * p["D"][:, None]
+    y = y.reshape(-1, di)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(u.dtype)
+    from repro.models.lm.attention import rmsnorm
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], {"h": h, "conv": conv_state,
+                                          "conv_bc": conv_bc_state}

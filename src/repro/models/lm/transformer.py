@@ -1,0 +1,436 @@
+"""Unified LM stack for every assigned architecture family.
+
+MaxText-style scan-over-layers: per-layer params are stacked on a leading L
+axis and the layer body is compiled ONCE (lax.scan), keeping HLO size O(1) in
+depth — this is what makes 61-64-layer 300B+ dry-runs compile on one CPU core
+and keeps the real-TPU compile times sane. Remat (activation checkpointing)
+wraps the scanned body; the policy is a config knob hillclimbed in §Perf.
+
+Families: dense GQA (granite/qwen2/minitron), MoE (grok-1/deepseek-v3 + MLA),
+SSM (falcon-mamba), hybrid mamba2+shared-attn (zamba2), VLM backbone
+(internvl2, stub vision frontend), and the enc-dec wrapper in encdec.py.
+
+Cross-entropy is *chunked over the sequence* (lax.scan): the (B,S,V) logits
+tensor — 550 TB for grok-1's train_4k cell — is never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.distributed import ctx as shard
+from repro.models.lm import attention as A
+from repro.models.lm import ffn as F
+from repro.models.lm import ssm as S
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def init_block(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return {"ln1": jnp.ones((d,), dtype), "mamba": S.init_mamba1(k1, cfg, dtype)}
+    if cfg.family == "hybrid":
+        return {"ln1": jnp.ones((d,), dtype), "mamba": S.init_mamba2(k1, cfg, dtype)}
+    p: Dict[str, Any] = {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype)}
+    p["attn"] = A.init_mla(k1, cfg, dtype) if cfg.use_mla else A.init_gqa(k1, cfg, dtype)
+    if cfg.n_experts:
+        p["moe"] = F.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = F.init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_shared_block(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """zamba2's weight-shared attention+MLP block (one set of weights, applied
+    every ``shared_attn_every`` layers — the paper-spirit 'shared subnet')."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+            "attn": A.init_gqa(k1, cfg, dtype),
+            "mlp": F.init_mlp(k2, d, cfg.d_ff, cfg.act, dtype)}
+
+
+def init_lm(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg, dtype))(lkeys)
+    params: Dict[str, Any] = {
+        "embed": (cfg.d_model ** -0.5 *
+                  jax.random.normal(ks[1], (cfg.vocab_padded, cfg.d_model))).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (cfg.d_model ** -0.5 * jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab_padded))).astype(dtype)
+    if cfg.shared_attn_every:
+        params["shared_block"] = init_shared_block(ks[3], cfg, dtype)
+    if cfg.mtp:
+        km = jax.random.split(ks[3], 3)
+        params["mtp"] = {
+            "proj": (cfg.d_model ** -0.5 * jax.random.normal(
+                km[0], (2 * cfg.d_model, cfg.d_model))).astype(dtype),
+            "block": init_block(km[1], cfg, dtype),
+            "ln": jnp.ones((cfg.d_model,), dtype),
+        }
+    if cfg.frontend == "vision":
+        params["vision_proj"] = (cfg.d_model ** -0.5 * jax.random.normal(
+            ks[3], (cfg.d_model, cfg.d_model))).astype(dtype)
+    return params
+
+
+# ===========================================================================
+# block forward (one layer; compiled once under scan)
+# ===========================================================================
+
+def block_forward(p, x: jax.Array, cfg: LMConfig, *, q_offset: int = 0
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence (train/prefill) layer. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        return x + S.mamba1_forward(p["mamba"], A.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg), aux
+    if cfg.family == "hybrid":
+        return x + S.mamba2_forward(p["mamba"], A.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg), aux
+    h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        x = x + A.mla_self_attention(p["attn"], h, cfg, q_offset=q_offset)
+    else:
+        x = x + A.gqa_self_attention(p["attn"], h, cfg, q_offset=q_offset)
+    h = A.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = F.moe_forward(p["moe"], h, cfg)
+    elif cfg.dynamic_width:
+        y = F.dynamic_width_ffn(p["mlp"], h, cfg.act)
+    else:
+        y = F.mlp(p["mlp"], h, cfg.act)
+    return x + y, aux
+
+
+def shared_block_forward(p, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + A.gqa_self_attention(p["attn"], h, cfg)
+    h = A.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + F.mlp(p["mlp"], h, cfg.act)
+
+
+# ===========================================================================
+# full-sequence forward (train / prefill hidden states)
+# ===========================================================================
+
+def lm_hidden(params, cfg: LMConfig, tokens: Optional[jax.Array] = None,
+              prefix_embeds: Optional[jax.Array] = None, *,
+              remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """-> (final hidden (B,S,D), moe aux loss). S = prefix + token length."""
+    parts = []
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(params["embed"].dtype)
+        if "vision_proj" in params:
+            pe = pe @ params["vision_proj"]
+        parts.append(pe)
+    if tokens is not None:
+        parts.append(jnp.take(params["embed"], tokens, axis=0))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    # Megatron-SP (seq over model) for attention archs. SSM/hybrid layers
+    # have mp-replicated mixer weights, so SP only buys per-chunk all-gathers
+    # of the scan tensors (§Perf Z2: 125 GB/dev of gathers on zamba2) — their
+    # sequence stays dp-only.
+    seq_mp = None if cfg.family in ("ssm", "hybrid") else "mp"
+    x = shard.constrain(x, "dp", seq_mp, None)
+
+    shared = params.get("shared_block")
+    every = cfg.shared_attn_every
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, i = inp
+        x, a = block_forward(lp, x, cfg)
+        if shared is not None and every:
+            x = lax.cond((i + 1) % every == 0,
+                         lambda v: shared_block_forward(shared, v, cfg),
+                         lambda v: v, x)
+        x = shard.constrain(x, "dp", seq_mp, None)
+        return (x, aux + a), None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                           (params["layers"], jnp.arange(cfg.n_layers)))
+    return A.rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ===========================================================================
+# chunked cross-entropy (never materializes (B,S,V))
+# ===========================================================================
+
+def head_weight(params) -> jax.Array:
+    return params.get("lm_head", params["embed"].T if "lm_head" not in params else None)
+
+
+def chunked_ce(h: jax.Array, w: jax.Array, labels: jax.Array,
+               chunk: int = 512) -> jax.Array:
+    """h: (B,S,D); w: (D,V); labels: (B,S) with -1 = masked. Mean over valid."""
+    b, s, d = h.shape
+    h = shard.constrain(h, "dp", None, None)      # un-SP before the seq-chunk reshape
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        hh, ll = inp
+        logits = (hh @ w).astype(jnp.float32)                 # (B,c,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        loss_sum, n = acc
+        return (loss_sum + jnp.sum((lse - gold) * mask), n + mask.sum()), None
+
+    (loss_sum, n), _ = lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                (hc, lc))
+    return loss_sum / jnp.maximum(n, 1.0)
+
+
+def lm_loss(params, cfg: LMConfig, tokens: jax.Array, labels: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None, *, remat: bool = True) -> jax.Array:
+    h, aux = lm_hidden(params, cfg, tokens, prefix_embeds, remat=remat)
+    if prefix_embeds is not None:                    # loss only on text positions
+        h = h[:, prefix_embeds.shape[1]:]
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    loss = chunked_ce(h, w, labels)
+    if cfg.n_experts:
+        loss = loss + MOE_AUX_WEIGHT * aux / cfg.n_layers
+    if cfg.mtp and "mtp" in params:
+        # deepseek MTP: predict t+2 from [h_t ; emb(t+1)] through one extra block
+        emb_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)
+        mtp_in = jnp.concatenate([h[:, :-1], emb_next], axis=-1) @ params["mtp"]["proj"]
+        mtp_h, _ = block_forward(params["mtp"]["block"], mtp_in, cfg)
+        mtp_h = A.rmsnorm(mtp_h, params["mtp"]["ln"], cfg.norm_eps)
+        mtp_labels = jnp.pad(labels[:, 2:], ((0, 0), (0, 1)), constant_values=-1)
+        loss = loss + MTP_WEIGHT * chunked_ce(mtp_h, w, mtp_labels[:, :mtp_h.shape[1]])
+    return loss
+
+
+# ===========================================================================
+# KV/state caches + decode
+# ===========================================================================
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        c = S.mamba1_init_cache(cfg, batch, dtype)
+        return {"ssm": jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), c)}
+    if cfg.family == "hybrid":
+        c = S.mamba2_init_cache(cfg, batch, dtype)
+        out = {"ssm": jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (L,) + x.shape).copy(), c)}
+        if cfg.shared_attn_every:
+            n_inv = cfg.n_layers // cfg.shared_attn_every
+            hd, g = cfg.resolved_head_dim, cfg.n_kv_heads
+            out["shared_kv"] = {
+                "k": jnp.zeros((n_inv, batch, max_len, g, hd), dtype),
+                "v": jnp.zeros((n_inv, batch, max_len, g, hd), dtype)}
+        return out
+    if cfg.use_mla:
+        return {"ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((L, batch, max_len, cfg.qk_rope_head_dim), dtype)}
+    hd, g = cfg.resolved_head_dim, cfg.n_kv_heads
+    return {"k": jnp.zeros((L, batch, max_len, g, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, g, hd), dtype)}
+
+
+def block_decode(p, x, cfg: LMConfig, cache_l, pos):
+    """One layer, one token. cache_l: this layer's cache slice."""
+    if cfg.family in ("ssm", "hybrid"):
+        h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        fn = S.mamba1_decode if cfg.family == "ssm" else S.mamba2_decode
+        y, new = fn(p["mamba"], h, cfg, cache_l)
+        return x + y, new
+    h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        o, new = A.mla_decode(p["attn"], h, cfg, cache_l, pos)
+    else:
+        o, new = A.gqa_decode(p["attn"], h, cfg, cache_l, pos)
+    x = x + o
+    h = A.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = F.moe_forward(p["moe"], h, cfg)
+    elif cfg.dynamic_width:
+        y = F.dynamic_width_ffn(p["mlp"], h, cfg.act)
+    else:
+        y = F.mlp(p["mlp"], h, cfg.act)
+    return x + y, new
+
+
+def shared_block_decode(p, x, cfg: LMConfig, kv, pos):
+    h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, new_kv = A.gqa_decode(p["attn"], h, cfg, kv, pos)
+    x = x + o
+    h = A.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + F.mlp(p["mlp"], h, cfg.act), new_kv
+
+
+def lm_decode_step(params, cfg: LMConfig, token: jax.Array, caches: Dict[str, Any],
+                   pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token: (B,1) int32; pos: () int32 fill count. -> (logits (B,V), caches)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    shared = params.get("shared_block")
+    every = cfg.shared_attn_every
+
+    if cfg.family in ("ssm", "hybrid"):
+        layer_caches = caches["ssm"]
+    elif cfg.use_mla:
+        layer_caches = {"ckv": caches["ckv"], "kr": caches["kr"]}
+    else:
+        layer_caches = {"k": caches["k"], "v": caches["v"]}
+
+    if shared is not None and every:
+        def body(carry, inp):
+            x, sh_kv = carry
+            lp, cache_l, i = inp
+            x, new_c = block_decode(lp, x, cfg, cache_l, pos)
+            inv = (i + 1) // every - 1
+
+            def apply(args):
+                x, sh_kv = args
+                kv = jax.tree_util.tree_map(lambda c: c[inv], sh_kv)
+                x, new_kv = shared_block_decode(shared, x, cfg, kv, pos)
+                sh_kv = jax.tree_util.tree_map(
+                    lambda c, n: lax.dynamic_update_index_in_dim(c, n, inv, 0),
+                    sh_kv, new_kv)
+                return x, sh_kv
+
+            x, sh_kv = lax.cond((i + 1) % every == 0, apply, lambda a: a, (x, sh_kv))
+            return (x, sh_kv), new_c
+
+        (x, sh_kv), new_caches = lax.scan(
+            body, (x, caches["shared_kv"]),
+            (params["layers"], layer_caches, jnp.arange(cfg.n_layers)))
+        out_caches = {"ssm": new_caches, "shared_kv": sh_kv}
+    else:
+        def body(x, inp):
+            lp, cache_l = inp
+            x, new_c = block_decode(lp, x, cfg, cache_l, pos)
+            return x, new_c
+
+        x, new_caches = lax.scan(body, x, (params["layers"], layer_caches))
+        if cfg.family == "ssm":
+            out_caches = {"ssm": new_caches}
+        else:
+            out_caches = new_caches
+
+    h = A.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (h[:, 0] @ w).astype(jnp.float32)
+    return logits, out_caches
+
+
+# ===========================================================================
+# prefill: full forward that also fills the caches
+# ===========================================================================
+
+def lm_prefill(params, cfg: LMConfig, tokens: jax.Array, max_len: int,
+               prefix_embeds: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Runs the full sequence AND builds caches for subsequent decode.
+    Returns (last-token logits (B,V), caches). For attention archs the caches
+    are the per-layer K/V (or MLA latents); for SSMs the final states."""
+    x0 = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x0.dtype)
+        if "vision_proj" in params:
+            pe = pe @ params["vision_proj"]
+        x0 = jnp.concatenate([pe, x0], axis=1)
+    b, s, _ = x0.shape
+
+    shared = params.get("shared_block")
+    every = cfg.shared_attn_every
+
+    if cfg.family == "hybrid" and shared is not None and every:
+        n_inv = cfg.n_layers // every
+        hd, g = cfg.resolved_head_dim, cfg.n_kv_heads
+        sh_kv0 = {"k": jnp.zeros((n_inv, b, max_len, g, hd), x0.dtype),
+                  "v": jnp.zeros((n_inv, b, max_len, g, hd), x0.dtype)}
+
+        def body(carry, inp):
+            x, sh_kv = carry
+            lp, i = inp
+            h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, st = S.mamba2_forward(lp["mamba"], h, cfg, return_state=True)
+            x = x + y
+            inv = (i + 1) // every - 1
+
+            def apply(args):
+                x, sh_kv = args
+                x, k, v = _shared_block_prefill(shared, x, cfg)
+                k = jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+                sh_kv = {"k": lax.dynamic_update_index_in_dim(sh_kv["k"], k.astype(sh_kv["k"].dtype), inv, 0),
+                         "v": lax.dynamic_update_index_in_dim(sh_kv["v"], v.astype(sh_kv["v"].dtype), inv, 0)}
+                return x, sh_kv
+
+            x, sh_kv = lax.cond((i + 1) % every == 0, apply, lambda a: a, (x, sh_kv))
+            return (x, sh_kv), st
+
+        (x, sh_kv), caches = lax.scan(body, (x0, sh_kv0),
+                                      (params["layers"], jnp.arange(cfg.n_layers)))
+        caches = {"ssm": caches, "shared_kv": sh_kv}
+    else:
+        def body(x, lp):
+            if cfg.family in ("ssm", "hybrid"):
+                h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                fwd = S.mamba1_forward if cfg.family == "ssm" else S.mamba2_forward
+                y, st = fwd(lp["mamba"], h, cfg, return_state=True)
+                return x + y, st
+            new_cache = _prefill_layer_cache(lp, x, cfg, s, max_len)
+            x, _ = block_forward(lp, x, cfg)
+            return x, new_cache
+
+        x, caches = lax.scan(body, x0, params["layers"])
+        if cfg.family in ("ssm", "hybrid"):
+            caches = {"ssm": caches}
+
+    h = A.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = (h[:, -1] @ w).astype(jnp.float32)
+    return logits, caches
+
+
+def _shared_block_prefill(p, x, cfg: LMConfig):
+    """Shared block full-seq forward that also returns its K/V for the cache."""
+    bsz, s, _ = x.shape
+    h = A.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = A.gqa_qkv(p["attn"], h, cfg, jnp.arange(s))
+    o = A.blockwise_attention(q, k, v, causal=True, chunk=min(cfg.attn_chunk, s))
+    x = x + o.reshape(bsz, s, -1) @ p["attn"]["wo"]
+    h = A.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + F.mlp(p["mlp"], h, cfg.act), k, v
+
+
+def _prefill_layer_cache(lp, x, cfg: LMConfig, s: int, max_len: int):
+    """Attention-arch cache from a prefill layer input (K/V or MLA latents)."""
+    h = A.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    pad = max_len - s
+    positions = jnp.arange(s)
+    if cfg.use_mla:
+        c_kv = A.rmsnorm(h @ lp["attn"]["wdkv"], lp["attn"]["kv_norm"], cfg.norm_eps)
+        cos, sin = A.rope_freqs(cfg.qk_rope_head_dim, cfg.rope_theta, positions)
+        kr = A.apply_rope((h @ lp["attn"]["wkr"]).reshape(x.shape[0], s, 1, -1), cos, sin)[:, :, 0]
+        return {"ckv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "kr": jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))}
+    _, k, v = A.gqa_qkv(lp["attn"], h, cfg, positions)
+    return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}

@@ -1,0 +1,111 @@
+"""RLFN (paper's reference model, Sec. III-A) and its pruned variant.
+
+RLFN = conv3 -> N x RLFB -> conv3 -> +global shortcut -> conv3 upsampler ->
+pixel shuffle.  RLFB = 3 x (conv3 + ReLU) -> +local shortcut -> conv1 -> ESA.
+
+The paper's "fair comparison" baseline is the *pruned* RLFN: 4 RLFBs,
+channels 52 -> 46. ESSR then removes the global shortcut and ESA, and
+factorizes the convolutions (models/essr.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class RLFNConfig:
+    channels: int = 52
+    n_blocks: int = 6
+    esa_channels: int = 16
+    scale: int = 4
+    in_channels: int = 3
+
+
+RLFN_BASE_X2 = RLFNConfig(scale=2)
+RLFN_BASE_X4 = RLFNConfig(scale=4)
+RLFN_PRUNED_X2 = RLFNConfig(channels=46, n_blocks=4, scale=2)
+RLFN_PRUNED_X4 = RLFNConfig(channels=46, n_blocks=4, scale=4)
+
+
+def _conv(key, cin, cout, k):
+    return {"w": L.conv_init(key, (k, k, cin, cout)), "b": jnp.zeros((cout,))}
+
+
+def init_esa(key, c: int, f: int) -> Dict[str, Any]:
+    k = jax.random.split(key, 5)
+    return {
+        "c1": _conv(k[0], c, f, 1),       # reduce
+        "cf": _conv(k[1], f, f, 1),       # skip path
+        "c2": _conv(k[2], f, f, 3),       # stride-2
+        "c3": _conv(k[3], f, f, 3),
+        "c4": _conv(k[4], f, c, 1),       # expand -> sigmoid gate
+    }
+
+
+def esa_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    n, h, w, _ = x.shape
+    f = L.conv2d(x, p["c1"]["w"], p["c1"]["b"])
+    v = L.conv2d(f, p["c2"]["w"], p["c2"]["b"], stride=2)
+    v = jax.lax.reduce_window(v, -jnp.inf, jax.lax.max, (1, 7, 7, 1), (1, 3, 3, 1), "SAME")
+    v = L.conv2d(v, p["c3"]["w"], p["c3"]["b"])
+    v = jax.image.resize(v, (n, h, w, v.shape[-1]), method="bilinear")
+    v = v + L.conv2d(f, p["cf"]["w"], p["cf"]["b"])
+    m = jax.nn.sigmoid(L.conv2d(v, p["c4"]["w"], p["c4"]["b"]))
+    return x * m
+
+
+def init_rlfb(key, c: int, f: int) -> Dict[str, Any]:
+    k = jax.random.split(key, 5)
+    return {
+        "c1": _conv(k[0], c, c, 3),
+        "c2": _conv(k[1], c, c, 3),
+        "c3": _conv(k[2], c, c, 3),
+        "fuse": _conv(k[3], c, c, 1),
+        "esa": init_esa(k[4], c, f),
+    }
+
+
+def rlfb_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    y = jax.nn.relu(L.conv2d(x, p["c1"]["w"], p["c1"]["b"]))
+    y = jax.nn.relu(L.conv2d(y, p["c2"]["w"], p["c2"]["b"]))
+    y = jax.nn.relu(L.conv2d(y, p["c3"]["w"], p["c3"]["b"]))
+    y = L.conv2d(y + x, p["fuse"]["w"], p["fuse"]["b"])
+    return esa_forward(p["esa"], y)
+
+
+def init_rlfn(key, cfg: RLFNConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_blocks + 3)
+    c = cfg.channels
+    return {
+        "head": _conv(keys[0], cfg.in_channels, c, 3),
+        "blocks": [init_rlfb(keys[1 + i], c, cfg.esa_channels) for i in range(cfg.n_blocks)],
+        "mid": _conv(keys[-2], c, c, 3),
+        "up": _conv(keys[-1], c, cfg.in_channels * cfg.scale ** 2, 3),
+    }
+
+
+def rlfn_forward(params: Dict[str, Any], x: jax.Array, cfg: RLFNConfig) -> jax.Array:
+    f0 = L.conv2d(x, params["head"]["w"], params["head"]["b"])
+    f = f0
+    for p in params["blocks"]:
+        f = rlfb_forward(p, f)
+    f = L.conv2d(f, params["mid"]["w"], params["mid"]["b"]) + f0   # global shortcut
+    up = L.conv2d(f, params["up"]["w"], params["up"]["b"])
+    return L.pixel_shuffle(up, cfg.scale)
+
+
+def rlfn_macs_per_lr_pixel(cfg: RLFNConfig) -> int:
+    """MACs/LR-pixel (ESA's downsampled interior approximated at 1/4 area)."""
+    c, f = cfg.channels, cfg.esa_channels
+    esa = c * f + f * f + 9 * f * f // 4 + 9 * f * f // 4 + f * c
+    block = 3 * 9 * c * c + c * c + esa
+    head = 9 * cfg.in_channels * c
+    mid = 9 * c * c
+    up = 9 * c * cfg.in_channels * cfg.scale ** 2
+    return head + cfg.n_blocks * block + mid + up

@@ -1,0 +1,127 @@
+"""PAMS quantization (paper Sec. IV-H; ref [21]).
+
+PAMS = symmetric uniform quantization with a *parameterized (learnable) max
+scale* alpha per tensor, trained with STE. The paper quantizes the WHOLE
+model (unlike PAMS' fp first/last layers) at FXP10 W/A (-0.03 dB).
+
+Two target modes:
+  * ``bits=10``: the paper-faithful FXP10 simulation;
+  * ``bits=8`` : TPU-native int8 (the MXU has an int8 datapath; DESIGN.md §3).
+
+Provides fake-quant training ops, PTQ calibration (percentile), a quantized
+ESSR forward, and an integer-consistency check used by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.essr import ESSRConfig, slice_width
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 10          # FXP10 (paper) | 8 (TPU int8)
+    per_channel_weights: bool = True
+    act_percentile: float = 99.9
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def quantize(x: jax.Array, alpha: jax.Array, qmax: int) -> jax.Array:
+    """Fake-quant with STE: forward = dequant(round(clip(x)/s)), grad = identity
+    inside the clip range (PAMS' straight-through rule)."""
+    s = alpha / qmax
+    xc = jnp.clip(x, -alpha, alpha)
+    q = jnp.round(xc / jnp.maximum(s, 1e-12)) * s
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+def int_codes(x: jax.Array, alpha: jax.Array, qmax: int) -> jax.Array:
+    """The integer lattice codes (for the integer-consistency test)."""
+    s = alpha / qmax
+    return jnp.round(jnp.clip(x, -alpha, alpha) / jnp.maximum(s, 1e-12)).astype(jnp.int32)
+
+
+def weight_alpha(w: jax.Array, per_channel: bool) -> jax.Array:
+    if per_channel and w.ndim == 4:
+        return jnp.max(jnp.abs(w), axis=(0, 1, 2), keepdims=True) + 1e-8
+    return jnp.max(jnp.abs(w)) + 1e-8
+
+
+def quantize_weight_tree(params, qcfg: QuantConfig):
+    """Fake-quantize every conv weight/bias-free leaf in an ESSR param tree."""
+    def q(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name.endswith("_b") or x.ndim < 2:
+            return x  # biases stay wide (they feed the 24b accumulator on HW)
+        return quantize(x, weight_alpha(x, qcfg.per_channel_weights), qcfg.qmax)
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+# ---------------------------------------------------------------------------
+# activation scales: PTQ calibration + learnable container
+# ---------------------------------------------------------------------------
+
+def _act_points(cfg: ESSRConfig) -> list:
+    """Names of activation-quant sites: after every conv group."""
+    pts = ["in", "first"]
+    for i in range(cfg.n_sfb):
+        pts += [f"sfb{i}_b1", f"sfb{i}_b2", f"sfb{i}_out"]
+    pts += ["recon"]
+    return pts
+
+
+def init_act_scales(cfg: ESSRConfig, init: float = 2.0) -> Dict[str, jax.Array]:
+    return {k: jnp.asarray(init, jnp.float32) for k in _act_points(cfg)}
+
+
+def quantized_essr_forward(params, act_scales: Dict[str, jax.Array], x: jax.Array,
+                           cfg: ESSRConfig, qcfg: QuantConfig = QuantConfig(),
+                           width: Optional[int] = None) -> jax.Array:
+    """ESSR forward with W/A fake-quant at every conv boundary (whole model,
+    as the paper does — no fp first/last exception)."""
+    if width == 0:
+        return L.bilinear_resize(x, cfg.scale)
+    if width is not None and width != cfg.channels:
+        params = slice_width(params, width)
+    params = quantize_weight_tree(params, qcfg)
+    qa = lambda name, t: quantize(t, jnp.abs(act_scales[name]) + 1e-8, qcfg.qmax)
+
+    f = qa("in", x)
+    f = qa("first", L.bsconv(params["first"], f))
+    for i, p in enumerate(params["sfbs"]):
+        y = qa(f"sfb{i}_b1", jax.nn.relu(L.bsconv(p["b1"], f)))
+        y = qa(f"sfb{i}_b2", jax.nn.relu(L.bsconv(p["b2"], y)))
+        y = L.pointwise(y + f, p["fuse"], p.get("fuse_b"))
+        f = qa(f"sfb{i}_out", jax.nn.relu(y))
+    up = qa("recon", L.dsconv(params["recon"], f))
+    return L.pixel_shuffle(up, cfg.scale)
+
+
+def calibrate_act_scales(params, cfg: ESSRConfig, sample: jax.Array,
+                         qcfg: QuantConfig = QuantConfig()) -> Dict[str, jax.Array]:
+    """PTQ: run fp forward on a calibration batch, set alpha = percentile(|act|)."""
+    scales: Dict[str, jax.Array] = {}
+    pct = qcfg.act_percentile
+
+    def rec(name, t):
+        scales[name] = jnp.percentile(jnp.abs(t), pct) + 1e-8
+        return t
+
+    f = rec("in", sample)
+    f = rec("first", L.bsconv(params["first"], f))
+    for i, p in enumerate(params["sfbs"]):
+        y = rec(f"sfb{i}_b1", jax.nn.relu(L.bsconv(p["b1"], f)))
+        y = rec(f"sfb{i}_b2", jax.nn.relu(L.bsconv(p["b2"], y)))
+        y = L.pointwise(y + f, p["fuse"], p.get("fuse_b"))
+        f = rec(f"sfb{i}_out", jax.nn.relu(y))
+    rec("recon", L.dsconv(params["recon"], f))
+    return scales

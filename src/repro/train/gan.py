@@ -1,0 +1,93 @@
+"""Perceptual-oriented (GAN) training phase — paper Sec. V-A.
+
+Starts from the trained PSNR model; generator loss =
+0.01*L1 + 1*artifact(LDL) + 1*perceptual + 0.005*adversarial, Adam 1e-4
+MultiStepLR. A compact patch discriminator stands in for [24]'s.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.essr import ESSRConfig, essr_forward
+from repro.train import losses as Ls
+from repro.train import optimizer as O
+
+
+def init_discriminator(key, channels=(32, 64, 64, 128)) -> Dict[str, Any]:
+    ps, cin = [], 3
+    for c in channels:
+        key, k = jax.random.split(key)
+        ps.append({"w": L.conv_init(k, (3, 3, cin, c)), "b": jnp.zeros(c)})
+        cin = c
+    key, k = jax.random.split(key)
+    return {"convs": ps, "head": {"w": L.conv_init(k, (3, 3, cin, 1)), "b": jnp.zeros(1)}}
+
+
+def discriminate(params, x: jax.Array) -> jax.Array:
+    h = x
+    for p in params["convs"]:
+        h = jax.nn.leaky_relu(L.conv2d(h, p["w"], p["b"], stride=2), 0.2)
+    return L.conv2d(h, params["head"]["w"], params["head"]["b"]).mean(axis=(1, 2, 3))
+
+
+def make_gan_steps(cfg: ESSRConfig, g_opt: O.Optimizer, d_opt: O.Optimizer,
+                   feat_params, weights=Ls.PERCEPTUAL_WEIGHTS):
+    def g_loss(params, d_params, lr_img, hr_img, width: int):
+        sr = essr_forward(params, lr_img, cfg, width=width)
+        adv = Ls.g_adv_loss_fn(discriminate(d_params, sr))
+        total = (weights["l1"] * Ls.l1_loss(sr, hr_img)
+                 + weights["artifact"] * Ls.artifact_loss(sr, hr_img)
+                 + weights["perceptual"] * Ls.perceptual_loss(feat_params, sr, hr_img)
+                 + weights["adv"] * adv)
+        return total, sr
+
+    def d_loss(d_params, sr, hr_img):
+        return Ls.d_loss_fn(discriminate(d_params, hr_img),
+                            discriminate(d_params, jax.lax.stop_gradient(sr)))
+
+    def g_step(params, g_state, d_params, lr_img, hr_img, *, width: int):
+        (val, sr), grads = jax.value_and_grad(g_loss, has_aux=True)(
+            params, d_params, lr_img, hr_img, width)
+        upd, g_state = g_opt.update(grads, g_state, params)
+        return O.apply_updates(params, upd), g_state, sr, val
+
+    def d_step(d_params, d_state, sr, hr_img):
+        val, grads = jax.value_and_grad(d_loss)(d_params, sr, hr_img)
+        upd, d_state = d_opt.update(grads, d_state, d_params)
+        return O.apply_updates(d_params, upd), d_state, val
+
+    return (jax.jit(g_step, static_argnames=("width",)), jax.jit(d_step))
+
+
+def train_essr_gan(params, cfg: ESSRConfig, data: Iterator, steps: int,
+                   seed: int = 0, log_every: int = 50, log_fn=print):
+    """Full perceptual phase driver (scaled-down schedule on CPU)."""
+    key = jax.random.PRNGKey(seed)
+    d_params = init_discriminator(key)
+    feat_params = Ls.init_feature_net(jax.random.PRNGKey(7))
+    g_opt = O.adam(O.multistep(1e-4, [steps // 2, 3 * steps // 4]))
+    d_opt = O.adam(O.multistep(1e-4, [steps // 2, 3 * steps // 4]))
+    g_state, d_state = g_opt.init(params), d_opt.init(d_params)
+    g_step, d_step = make_gan_steps(cfg, g_opt, d_opt, feat_params)
+    rng = np.random.default_rng(seed)
+    from repro.core.supernet import subnet_sampling_probs
+    widths = [w for w in cfg.subnet_widths() if w > 0]
+    probs = subnet_sampling_probs(cfg)
+    hist = []
+    for i in range(steps):
+        lr_img, hr_img = next(data)
+        width = int(rng.choice(widths, p=probs))
+        params, g_state, sr, gl = g_step(params, g_state, d_params, lr_img, hr_img,
+                                         width=width)
+        d_params, d_state, dl = d_step(d_params, d_state, sr, hr_img)
+        hist.append((float(gl), float(dl)))
+        if log_every and (i + 1) % log_every == 0:
+            g_m = np.mean([h[0] for h in hist[-log_every:]])
+            d_m = np.mean([h[1] for h in hist[-log_every:]])
+            log_fn(f"gan step {i+1:5d}  G {g_m:.4f}  D {d_m:.4f}")
+    return params, d_params, hist

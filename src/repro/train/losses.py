@@ -1,0 +1,141 @@
+"""Losses + image metrics.
+
+PSNR-oriented phase: L1 (paper Sec. V-A).
+Perceptual phase: 0.01*L1 + 1*artifact(LDL) + 1*perceptual + 0.005*adversarial.
+
+Perceptual features use a FIXED random-init conv stack (offline container has
+no pretrained VGG — documented substitute, DESIGN.md §8). The LDL artifact
+loss is implemented from its definition (local-variance-weighted residual).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# pixel losses / metrics
+# ---------------------------------------------------------------------------
+
+def l1_loss(sr: jax.Array, hr: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.abs(sr - hr))
+
+
+def charbonnier(sr: jax.Array, hr: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return jnp.mean(jnp.sqrt((sr - hr) ** 2 + eps * eps))
+
+
+def psnr(sr: jax.Array, hr: jax.Array, peak: float = 1.0) -> jax.Array:
+    mse = jnp.mean((sr - hr) ** 2)
+    return 10.0 * jnp.log10(peak * peak / jnp.maximum(mse, 1e-12))
+
+
+def psnr_y(sr: jax.Array, hr: jax.Array) -> jax.Array:
+    """Y-channel PSNR (the SR literature convention the paper uses)."""
+    ys = L.rgb_to_luma(jnp.clip(sr, 0, 1)) / 255.0
+    yh = L.rgb_to_luma(jnp.clip(hr, 0, 1)) / 255.0
+    return psnr(ys, yh)
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jax.Array:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(x ** 2) / (2 * sigma ** 2))
+    g = g / g.sum()
+    return jnp.outer(g, g)
+
+
+def ssim(sr: jax.Array, hr: jax.Array, peak: float = 1.0) -> jax.Array:
+    """Single-scale SSIM on luma, 11x11 gaussian window (standard constants)."""
+    c1, c2 = (0.01 * peak) ** 2, (0.03 * peak) ** 2
+    x = L.rgb_to_luma(jnp.clip(sr, 0, 1))[..., None] / 255.0 if sr.shape[-1] == 3 else sr
+    y = L.rgb_to_luma(jnp.clip(hr, 0, 1))[..., None] / 255.0 if hr.shape[-1] == 3 else hr
+    if x.ndim == 3:
+        x, y = x[None], y[None]
+    k = _gaussian_kernel().reshape(11, 11, 1, 1)
+
+    def f(z):
+        return lax.conv_general_dilated(z, k, (1, 1), "VALID",
+                                        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    mx, my = f(x), f(y)
+    sxx, syy, sxy = f(x * x) - mx * mx, f(y * y) - my * my, f(x * y) - mx * my
+    s = ((2 * mx * my + c1) * (2 * sxy + c2)) / ((mx * mx + my * my + c1) * (sxx + syy + c2))
+    return jnp.mean(s)
+
+
+# ---------------------------------------------------------------------------
+# perceptual distance (fixed random feature stack — LPIPS stand-in)
+# ---------------------------------------------------------------------------
+
+def init_feature_net(key: jax.Array, channels=(16, 32, 64)) -> Dict[str, Any]:
+    ps, cin = [], 3
+    for i, c in enumerate(channels):
+        key, k = jax.random.split(key)
+        ps.append({"w": L.conv_init(k, (3, 3, cin, c)), "b": jnp.zeros(c)})
+        cin = c
+    return {"convs": ps}
+
+
+def feature_stack(params, x: jax.Array) -> Tuple[jax.Array, ...]:
+    feats = []
+    for p in params["convs"]:
+        x = jax.nn.relu(L.conv2d(x, p["w"], p["b"], stride=2))
+        feats.append(x)
+    return tuple(feats)
+
+
+def perceptual_loss(feat_params, sr: jax.Array, hr: jax.Array) -> jax.Array:
+    fs, fh = feature_stack(feat_params, sr), feature_stack(feat_params, hr)
+    def nrm(f):
+        return f * lax.rsqrt(jnp.mean(f * f, axis=-1, keepdims=True) + 1e-8)
+    return sum(jnp.mean(jnp.abs(nrm(a) - nrm(b))) for a, b in zip(fs, fh)) / len(fs)
+
+
+def perceptual_distance(key_or_params, sr, hr):
+    """LPIPS-like scalar for evaluation (lower = perceptually closer)."""
+    params = init_feature_net(jax.random.PRNGKey(7)) if not isinstance(key_or_params, dict) else key_or_params
+    return perceptual_loss(params, sr, hr)
+
+
+# ---------------------------------------------------------------------------
+# LDL artifact loss (Liang et al. 2022, paper ref [24]) — simplified faithful
+# ---------------------------------------------------------------------------
+
+def _local_var(x: jax.Array, k: int = 7) -> jax.Array:
+    ones = jnp.ones((k, k, 1, 1), x.dtype) / (k * k)
+    lum = x.mean(axis=-1, keepdims=True)
+    f = lambda z: lax.conv_general_dilated(z, ones, (1, 1), "SAME",
+                                           dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    mu = f(lum)
+    return jnp.maximum(f(lum * lum) - mu * mu, 0.0)
+
+
+def artifact_loss(sr: jax.Array, hr: jax.Array, gamma: float = 0.25) -> jax.Array:
+    """Residuals are penalized where the *SR* image is locally unstable
+    (variance-refined artifact map, stop-gradded as in LDL)."""
+    resid = jnp.abs(sr - hr)
+    amap = lax.stop_gradient(_local_var(sr) ** gamma * resid.mean(axis=-1, keepdims=True))
+    amap = amap / (jnp.mean(amap) + 1e-8)
+    return jnp.mean(amap * resid)
+
+
+# ---------------------------------------------------------------------------
+# GAN bits (vanilla non-saturating; discriminator in train/gan.py)
+# ---------------------------------------------------------------------------
+
+def d_loss_fn(real_logits: jax.Array, fake_logits: jax.Array) -> jax.Array:
+    return (jnp.mean(jax.nn.softplus(-real_logits)) +
+            jnp.mean(jax.nn.softplus(fake_logits)))
+
+
+def g_adv_loss_fn(fake_logits: jax.Array) -> jax.Array:
+    return jnp.mean(jax.nn.softplus(-fake_logits))
+
+
+PERCEPTUAL_WEIGHTS = {"l1": 0.01, "artifact": 1.0, "perceptual": 1.0, "adv": 0.005}

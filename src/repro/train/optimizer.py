@@ -1,0 +1,196 @@
+"""Hand-written optimizers (no optax in the container).
+
+optax-compatible surface: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``. Provided: sgd, adam, adamw, lamb (paper's PSNR phase),
+adafactor (for the 100B+ dry-run configs' optimizer-state math), schedules
+(cosine / multistep / warmup), global-norm clipping, gradient accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+tmap = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_scale: float = 0.0,
+                 warmup: int = 0) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1.0, warmup)) if warmup else 1.0
+        t = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * warm * (final_scale + (1 - final_scale) * cos)
+    return fn
+
+
+def multistep(lr: float, milestones: Sequence[int], gamma: float = 0.5) -> Schedule:
+    ms = jnp.asarray(list(milestones), jnp.float32)
+    def fn(step):
+        k = jnp.sum(jnp.asarray(step, jnp.float32)[None] >= ms)
+        return lr * gamma ** k
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# optimizer core
+# ---------------------------------------------------------------------------
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return tmap(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return tmap(lambda x: x * scale, grads), g
+
+
+def sgd(lr: Schedule | float, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        mom = tmap(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mom = tmap(lambda m, g: momentum * m + g, state["mom"], grads)
+            upd = tmap(lambda m: -lr_t * m, mom)
+            return upd, {"step": step, "mom": mom}
+        return tmap(lambda g: -lr_t * g, grads), {"step": step, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr: Schedule | float, b1: float, b2: float, eps: float,
+               weight_decay: float, lamb_trust: bool,
+               moment_dtype=jnp.float32) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": tmap(lambda p: jnp.zeros_like(p, moment_dtype), params),
+                "v": tmap(lambda p: jnp.zeros_like(p, moment_dtype), params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        bc1, bc2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+        m = tmap(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                + (1 - b1) * g.astype(jnp.float32)).astype(m_.dtype),
+                 state["m"], grads)
+        v = tmap(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                                + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v_.dtype),
+                 state["v"], grads)
+
+        def upd_leaf(m_, v_, p):
+            m_, v_ = m_.astype(jnp.float32), v_.astype(jnp.float32)
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            if lamb_trust:
+                pn = jnp.linalg.norm(p.astype(jnp.float32).reshape(-1))
+                un = jnp.linalg.norm(u.reshape(-1))
+                trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+                u = trust * u
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = tmap(upd_leaf, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, moment_dtype=jnp.float32) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=0.0, lamb_trust=False,
+                      moment_dtype=moment_dtype)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=1e-2) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, lamb_trust=False)
+
+
+def lamb(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.0) -> Optimizer:
+    """LAMB — the paper's PSNR-phase optimizer (batch 256, lr 3e-3 cosine)."""
+    return _adam_core(lr, b1, b2, eps, weight_decay, lamb_trust=True)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30) -> Optimizer:
+    """Factored second moment (rank-1 for matrices) — O(n+m) state instead of
+    O(nm); the optimizer-state footprint used in the dry-run math for the
+    300B+ configs."""
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32), "f": tmap(leaf, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        new_f, upds = [], []
+        for g, f, p in zip(flat_g, flat_f, flat_p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * f["c"] + (1 - beta) * g2.mean(axis=-2)
+                vhat = r[..., None] * c[..., None, :] / jnp.maximum(
+                    r.mean(axis=-1)[..., None, None], eps)
+                new_f.append({"r": r, "c": c})
+            else:
+                vhat = beta * f["v"] + (1 - beta) * g2
+                new_f.append({"v": vhat})
+            u = g32 * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            # update clipping (RMS<=1) as in the paper's Alg. 4
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            upds.append((-lr_t * u).astype(p.dtype))
+        return (jax.tree_util.tree_unflatten(tdef, upds),
+                {"step": step, "f": jax.tree_util.tree_unflatten(tdef, new_f)})
+
+    return Optimizer(init, update)
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params)
+    return Optimizer(opt.init, update)

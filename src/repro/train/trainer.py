@@ -1,0 +1,91 @@
+"""Training loop: supernet-sampled ESSR training (paper Sec. V-A recipe).
+
+PSNR phase: L1, Lamb, lr 3e-3 cosine, batch 256, EMA 0.999, 200K iters —
+all supported; examples run a scaled-down schedule on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import supernet
+from repro.models.essr import ESSRConfig, essr_forward
+from repro.train import losses as Ls
+from repro.train import optimizer as O
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    ema: Any
+    step: int = 0
+
+    def tree(self):
+        return {"params": self.params, "opt_state": self.opt_state,
+                "ema": self.ema, "step": self.step}
+
+
+def make_supernet_step(cfg: ESSRConfig, opt: O.Optimizer,
+                       loss=Ls.l1_loss, ema_decay: float = 0.999):
+    """Returns jitted ``step(params, opt_state, ema, lr, hr, width)`` with
+    ``width`` static — two specializations (27, 54) get compiled."""
+
+    def loss_fn(params, lr_img, hr_img, width: int):
+        sr = essr_forward(params, lr_img, cfg, width=width)
+        return loss(sr, hr_img)
+
+    def step(params, opt_state, ema, lr_img, hr_img, *, width: int):
+        val, grads = jax.value_and_grad(loss_fn)(params, lr_img, hr_img, width)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = O.apply_updates(params, updates)
+        ema = supernet.ema_update(ema, params, ema_decay)
+        return params, opt_state, ema, val
+
+    return jax.jit(step, static_argnames=("width",))
+
+
+def train_essr_supernet(params, cfg: ESSRConfig, data: Iterator,
+                        steps: int, opt: Optional[O.Optimizer] = None,
+                        seed: int = 0, log_every: int = 50,
+                        log_fn: Callable[[str], None] = print) -> Tuple[Any, Any, list]:
+    """ARM-style sampled-subnet training. Returns (params, ema, loss_history)."""
+    opt = opt or O.lamb(O.cosine_decay(3e-3, steps))
+    opt_state = opt.init(params)
+    ema = supernet.ema_init(params)
+    step_fn = make_supernet_step(cfg, opt)
+    rng = np.random.default_rng(seed)
+    widths = [w for w in cfg.subnet_widths() if w > 0]
+    probs = supernet.subnet_sampling_probs(cfg)
+    history = []
+    for i in range(steps):
+        lr_img, hr_img = next(data)
+        width = int(rng.choice(widths, p=probs))
+        params, opt_state, ema, val = step_fn(params, opt_state, ema, lr_img, hr_img,
+                                              width=width)
+        history.append(float(val))
+        if log_every and (i + 1) % log_every == 0:
+            log_fn(f"step {i+1:6d}  width C{width}  loss {np.mean(history[-log_every:]):.5f}")
+    return params, ema, history
+
+
+def make_grad_accum_step(loss_fn, opt: O.Optimizer, n_micro: int):
+    """Gradient accumulation: one optimizer step from ``n_micro`` microbatches
+    (batch axis folded as (n_micro, micro, ...)); lax.scan keeps HLO compact."""
+
+    def step(params, opt_state, batch):
+        def micro(accum, mb):
+            val, grads = jax.value_and_grad(loss_fn)(params, *mb)
+            return (jax.tree_util.tree_map(lambda a, g: a + g / n_micro, accum, grads),
+                    val)
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        grads, vals = jax.lax.scan(micro, zeros, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return O.apply_updates(params, updates), opt_state, vals.mean()
+
+    return jax.jit(step)

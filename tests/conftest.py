@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device
+# (the 512-device fake topology belongs to launch/dryrun.py ONLY).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,66 @@
+"""Resource-adaptive model switching — Algorithm 1 (Sec. IV-A)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import subnet_policy as sp
+from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
+
+
+def _mk(budget=10_000, high=1000, low=700, fps=30):
+    return AdaptiveSwitcher(SwitchingConfig(
+        c54_per_sec_budget=budget, frame_high=high, frame_low=low, fps=fps))
+
+
+def test_budget_ceiling_demotes_to_c27():
+    """'Rest of the patches run with C27' when the per-second C54 budget hits."""
+    sw = _mk(budget=5)
+    ids = sw.assign(np.full(20, 255.0))          # all want C54
+    assert (ids == sp.C54).sum() == 5
+    assert (ids == sp.C27).sum() == 15
+    assert (ids == sp.BILINEAR).sum() == 0       # quality floor is C27, not bilinear
+
+
+def test_thresholds_rise_when_frame_overloaded():
+    sw = _mk(budget=10 ** 9, high=10, low=2)
+    t1, t2 = sw.thresholds
+    sw.assign(np.full(50, 255.0))                # 50 C54 > high=10
+    assert sw.thresholds == (t1 + 1, t2 + 5)     # Algorithm 1: +1 / +5
+
+
+def test_thresholds_fall_when_frame_underloaded():
+    sw = _mk(budget=10 ** 9, high=100, low=50)
+    t1, t2 = sw.thresholds
+    sw.assign(np.full(10, 255.0))                # 10 C54 < low=50
+    assert sw.thresholds == (t1 - 1, t2 - 5)
+
+
+def test_budget_resets_each_second():
+    sw = _mk(budget=5, fps=2)
+    sw.assign(np.full(10, 255.0))
+    sw.assign(np.full(10, 255.0))                # second rolls over after 2 frames
+    ids = sw.assign(np.full(10, 255.0))
+    assert (ids == sp.C54).sum() == 5            # fresh budget
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0, 255), min_size=1, max_size=200), st.integers(1, 50))
+def test_controller_invariants(scores, frames):
+    """Thresholds stay bounded + ordered; C54/sec never exceeds budget."""
+    sw = _mk(budget=20, high=5, low=1, fps=4)
+    scores = np.array(scores, np.float32)
+    c54_in_second = 0
+    for f in range(min(frames, 20)):
+        if f % 4 == 0:
+            c54_in_second = 0
+        ids = sw.assign(scores)
+        c54_in_second += (ids == sp.C54).sum()
+        assert c54_in_second <= 20
+        t1, t2 = sw.thresholds
+        assert 0 <= t1 < t2 <= 256
+
+
+def test_straggler_demotion_raises_thresholds():
+    sw = _mk()
+    t1, t2 = sw.thresholds
+    sw.demote_for_straggler(severity=2.0)
+    assert sw.thresholds == (t1 + 2, t2 + 10)

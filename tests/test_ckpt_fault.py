@@ -1,0 +1,105 @@
+"""Checkpointing + fault-tolerant supervision + elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (InjectedFailure, StragglerMonitor,
+                                           SupervisorConfig, TrainSupervisor)
+
+
+def _state(x=0.0):
+    return {"w": jnp.asarray([x, x + 1.0]), "step": jnp.asarray(0, jnp.int32),
+            "nested": {"m": jnp.ones((2, 3)) * x}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    s = _state(3.0)
+    cm.save(10, s, meta={"foo": "bar"})
+    restored, meta = cm.restore(_state())
+    assert meta["step"] == 10 and meta["foo"] == "bar"
+    np.testing.assert_allclose(np.asarray(restored["w"]), [3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(restored["nested"]["m"]), 3.0)
+
+
+def test_keep_k_retention(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        cm.save(step, _state(step))
+    assert cm.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(5, _state(5.0), blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 5
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(1, _state(1.0))
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names)
+
+
+def test_supervisor_recovers_and_replays_deterministically(tmp_path):
+    """Crash at step 47 -> restore from 40 -> final state bit-identical to a
+    crash-free run (deterministic replay)."""
+
+    def step_fn(state, batch):
+        return {"w": state["w"] + batch}, {}
+
+    def make_batch(step):
+        return jnp.asarray(float(step))
+
+    def run(with_failure):
+        cm = CheckpointManager(str(tmp_path / ("a" if with_failure else "b")), keep=3)
+        sup = TrainSupervisor(step_fn, make_batch, cm,
+                              SupervisorConfig(ckpt_every=10, async_ckpt=False))
+        fired = {"done": False}
+
+        def hook(step):
+            if with_failure and step == 47 and not fired["done"]:
+                fired["done"] = True
+                raise InjectedFailure("simulated node loss")
+
+        return sup.run({"w": jnp.zeros(())}, 0, 60, failure_hook=hook), sup
+
+    s_fail, sup = run(True)
+    s_ok, _ = run(False)
+    assert sup.restarts == 1
+    np.testing.assert_allclose(np.asarray(s_fail["w"]), np.asarray(s_ok["w"]))
+
+
+def test_supervisor_elastic_reshard_hook(tmp_path):
+    calls = []
+
+    def step_fn(state, batch):
+        return state, {}
+
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    sup = TrainSupervisor(step_fn, lambda s: None, cm,
+                          SupervisorConfig(ckpt_every=5, async_ckpt=False))
+    fired = {"done": False}
+
+    def hook(step):
+        if step == 7 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("host lost")
+
+    sup.run({"w": jnp.zeros(())}, 0, 10, failure_hook=hook,
+            reshard=lambda s: (calls.append(1), s)[1])
+    assert calls == [1]                       # reshard invoked on recovery
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(4, k=1.5)
+    for shard, dt in [(0, 1.0), (1, 1.0), (2, 1.0), (3, 5.0)]:
+        for _ in range(3):
+            m.record(shard, dt)
+    assert m.stragglers().tolist() == [3]

@@ -1,0 +1,74 @@
+"""Edge score + subnet decision (paper Sec. II) — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import subnet_policy as sp
+from repro.core.edge_score import edge_score, edge_score_luma
+from repro.models.essr import ESSR_X4
+
+
+def test_edge_score_flat_patch_is_zero():
+    flat = jnp.ones((2, 16, 16, 3)) * 0.3
+    np.testing.assert_allclose(np.asarray(edge_score(flat)), 0.0, atol=1e-3)
+
+
+def test_edge_score_detects_edges():
+    patch = np.zeros((1, 16, 16, 3), np.float32)
+    patch[:, :, 8:] = 1.0                     # vertical step edge
+    s_edge = float(edge_score(jnp.asarray(patch))[0])
+    s_flat = float(edge_score(jnp.zeros((1, 16, 16, 3)))[0])
+    assert s_edge > s_flat + 5.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_edge_score_invariant_to_luma_offset(seed):
+    """Laplacian of a constant is 0 => adding a constant can't change score."""
+    key = jax.random.PRNGKey(seed)
+    luma = jax.random.uniform(key, (1, 12, 12)) * 100.0
+    s1 = float(edge_score_luma(luma)[0])
+    s2 = float(edge_score_luma(luma + 50.0)[0])
+    assert abs(s1 - s2) < 1e-2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_scores_in_range(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (4, 16, 16, 3))
+    s = np.asarray(edge_score(x))
+    assert (s >= 0).all() and (s <= 255).all()
+
+
+def test_decision_boundaries():
+    scores = jnp.asarray([0.0, 7.9, 8.0, 39.9, 40.0, 200.0])
+    ids = np.asarray(sp.decide(scores, 8, 40))
+    assert ids.tolist() == [0, 0, 1, 1, 2, 2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0, 255), min_size=4, max_size=64),
+       st.floats(1, 100), st.floats(1, 100))
+def test_raising_thresholds_never_raises_macs(scores, t1, dt):
+    """Monotonicity: higher thresholds => never more MACs."""
+    t2 = t1 + dt
+    m = sp.SubnetMacs.make(ESSR_X4)
+    arr = jnp.asarray(np.array(scores, np.float32))
+    base = m.total(sp.subnet_counts(sp.decide(arr, t1, t2)))
+    up = m.total(sp.subnet_counts(sp.decide(arr, t1 + 5, t2 + 5)))
+    assert up <= base
+
+
+def test_threshold_search_hits_target():
+    rng = np.random.default_rng(0)
+    scores = rng.uniform(0, 120, size=500)
+    t1, t2 = sp.thresholds_for_target_saving(scores, 0.5, ESSR_X4)
+    got = sp.mac_saving(scores, t1, t2, ESSR_X4)["saving_vs_c54"]
+    assert abs(got - 0.5) < 0.08
+
+
+def test_mac_saving_all_c54_is_zero():
+    scores = np.full(10, 255.0)
+    assert sp.mac_saving(scores, 8, 40, ESSR_X4)["saving_vs_c54"] == 0.0

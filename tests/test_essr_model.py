@@ -1,0 +1,89 @@
+"""ESSR model: exact paper identities + forward behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.essr import (ESSRConfig, ESSR_X2, ESSR_X4, essr_forward,
+                               essr_macs, essr_macs_per_lr_pixel,
+                               essr_param_count, init_essr, slice_width)
+from repro.models.layers import count_params
+
+
+def test_param_counts_match_paper_table2():
+    # Table II: 4 SFB -> 43.9K, 5 -> 53.9K, 6 -> 63.9K, 5 w/o bias -> 53.6K
+    assert essr_param_count(ESSRConfig(n_sfb=4, scale=4)) == 43_896
+    assert essr_param_count(ESSRConfig(n_sfb=5, scale=4)) == 53_886
+    assert essr_param_count(ESSRConfig(n_sfb=6, scale=4)) == 63_876
+    # Table II's "5-w/o Bias = 53.6K" drops exactly the fuse-1x1 + final-pw
+    # biases (5*54 + 48 = 318 params): 53886-318 = 53568 = 53.6K. Our
+    # bias=False removes ALL biases (52,326) — both identities checked:
+    assert 53_886 - (5 * 54 + 48) == 53_568
+    assert essr_param_count(ESSRConfig(n_sfb=5, scale=4, bias=False)) == 52_326
+
+
+def test_param_count_x2_matches_paper_51k():
+    assert essr_param_count(ESSR_X2) == 51_906          # Table V "51K"
+
+
+def test_init_matches_formula():
+    for cfg in (ESSR_X2, ESSR_X4):
+        p = init_essr(jax.random.PRNGKey(0), cfg)
+        assert count_params(p) == essr_param_count(cfg)
+
+
+def test_macs_match_paper_tables():
+    # Table V/VI: MACs at 1920x1080 GT: x2 -> 26G, x4 -> 7G
+    assert abs(essr_macs(ESSR_X2, (540, 960)) / 1e9 - 26.1) < 0.2
+    assert abs(essr_macs(ESSR_X4, (270, 480)) / 1e9 - 6.78) < 0.1
+
+
+def test_c27_is_29_percent_of_c54_macs():
+    # Sec. IV-C: "MACs of the C27 model amount to only 29.1% of ... C54"
+    ratio = essr_macs_per_lr_pixel(ESSR_X4, 27) / essr_macs_per_lr_pixel(ESSR_X4, 54)
+    assert abs(ratio - 0.291) < 0.02
+
+
+def test_forward_shapes_and_finite():
+    p = init_essr(jax.random.PRNGKey(0), ESSR_X4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 12, 12, 3))
+    for w in (0, 27, 54):
+        y = essr_forward(p, x, ESSR_X4, width=w)
+        assert y.shape == (2, 48, 48, 3)
+        assert bool(jnp.isfinite(y).all())
+
+
+def test_width_slicing_consistency():
+    """C27 forward == forward of explicitly sliced params (weight sharing)."""
+    p = init_essr(jax.random.PRNGKey(0), ESSR_X4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    via_width = essr_forward(p, x, ESSR_X4, width=27)
+    sliced = slice_width(p, 27)
+    via_slice = essr_forward(sliced, x, ESSRConfig(channels=27, scale=4))
+    np.testing.assert_allclose(np.asarray(via_width), np.asarray(via_slice),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_supernet_grads_only_touch_selected_slice():
+    """ARM training rule: C27 loss grads vanish outside the first-27 slice."""
+    p = init_essr(jax.random.PRNGKey(0), ESSR_X4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    hr = jax.random.uniform(jax.random.PRNGKey(2), (1, 32, 32, 3))
+
+    def loss(params):
+        return jnp.mean(jnp.abs(essr_forward(params, x, ESSR_X4, width=27) - hr))
+
+    g = jax.grad(loss)(p)
+    # second-half output channels of the first conv never touched by C27
+    assert float(jnp.abs(g["first"]["pw"][..., 27:]).max()) == 0.0
+    assert float(jnp.abs(g["sfbs"][0]["fuse"][:, :, 27:, :]).max()) == 0.0
+    assert float(jnp.abs(g["sfbs"][0]["fuse"][:, :, :27, 27:]).max()) == 0.0
+    # sliced region does receive gradient
+    assert float(jnp.abs(g["first"]["pw"][..., :27]).max()) > 0.0
+
+
+def test_bilinear_subnet_is_pure_interpolation():
+    p = init_essr(jax.random.PRNGKey(0), ESSR_X4)
+    x = jnp.ones((1, 8, 8, 3)) * 0.5
+    y = essr_forward(p, x, ESSR_X4, width=0)
+    np.testing.assert_allclose(np.asarray(y), 0.5, rtol=1e-6)

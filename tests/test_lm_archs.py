@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests (assignment f): reduced config of each of the
+10 archs runs one forward/train step on CPU, asserting shapes + no NaNs;
+plus decode<->prefill consistency on representatives of each family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import param_count_estimate
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.models.lm import encdec as E
+from repro.models.lm import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+B, S, ML = 2, 16, 24
+
+
+def _batch(cfg):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.is_encoder_decoder:
+        extras["src"] = jax.random.normal(KEY, (B, S, cfg.d_model))
+    if cfg.frontend == "vision":
+        extras["pe"] = jax.random.normal(KEY, (B, cfg.n_frontend_tokens, cfg.d_model))
+    return toks, extras
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_and_loss(name):
+    cfg = get_config(name, smoke=True)
+    toks, extras = _batch(cfg)
+    if cfg.is_encoder_decoder:
+        p = E.init_encdec(KEY, cfg)
+        loss = E.encdec_loss(p, cfg, extras["src"], toks, toks)
+    else:
+        p = T.init_lm(KEY, cfg)
+        loss = T.lm_loss(p, cfg, toks, toks, prefix_embeds=extras.get("pe"))
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_train_step_reduces_loss(name):
+    """One real optimizer step must run and produce finite, changed params."""
+    from repro.launch import steps as ST
+    from repro.train import optimizer as O
+    cfg = get_config(name, smoke=True)
+    opt = O.chain_clip(O.adam(1e-2), 1.0)    # no warmup: bf16-visible updates
+    toks, extras = _batch(cfg)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.is_encoder_decoder:
+        batch["src_embeds"] = extras["src"].astype(jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["embeds"] = extras["pe"].astype(jnp.bfloat16)
+    p = (E.init_encdec if cfg.is_encoder_decoder else T.init_lm)(KEY, cfg)
+    state = {"params": p, "opt": opt.init(p)}
+    step = jax.jit(ST.make_train_step(cfg, opt, remat=False))
+    new_state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    before = jax.tree_util.tree_leaves(p)[0]
+    after = jax.tree_util.tree_leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(before, np.float32), np.asarray(after, np.float32))
+
+
+@pytest.mark.parametrize("name", ["granite-8b", "deepseek-v3-671b",
+                                  "falcon-mamba-7b", "zamba2-1.2b",
+                                  "seamless-m4t-medium", "qwen2-0.5b"])
+def test_decode_matches_prefill_next_token(name):
+    """Prefill S tokens, decode token S; compare against prefilling S+1 —
+    the KV-cache path must agree with the full forward (per family)."""
+    cfg = get_config(name, smoke=True)
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        src = jax.random.normal(KEY, (B, 8, cfg.d_model))
+        p = E.init_encdec(KEY, cfg)
+        _, caches = E.encdec_prefill(p, cfg, src, toks[:, :S], ML)
+        logits_dec, _ = E.encdec_decode_step(p, cfg, toks[:, S:S + 1], caches,
+                                             jnp.asarray(S))
+        logits_ref, _ = E.encdec_prefill(p, cfg, src, toks, ML)
+    else:
+        p = T.init_lm(KEY, cfg)
+        _, caches = T.lm_prefill(p, cfg, toks[:, :S], ML)
+        logits_dec, _ = T.lm_decode_step(p, cfg, toks[:, S:S + 1], caches,
+                                         jnp.asarray(S))
+        logits_ref, _ = T.lm_prefill(p, cfg, toks, ML)
+    # bf16 params + different contraction order (e.g. MLA absorbed decode)
+    # => small absolute drift; ranking must agree up to near-ties.
+    ld, lr = np.asarray(logits_dec), np.asarray(logits_ref)
+    np.testing.assert_allclose(ld, lr, rtol=8e-2, atol=8e-2)
+    ref_max = lr.max(-1)
+    chosen = np.take_along_axis(lr, ld.argmax(-1)[..., None], -1)[..., 0]
+    assert (ref_max - chosen <= 0.1).all(), "decode picked a non-near-tie token"
+
+
+def test_param_estimates_match_full_configs():
+    """Closed-form estimates used in §Roofline MODEL_FLOPS hit the advertised
+    model sizes (within naming tolerance)."""
+    expect = {"grok-1-314b": (314e9, 0.15), "deepseek-v3-671b": (671e9, 0.15),
+              "granite-8b": (8e9, 0.15), "minitron-8b": (8e9, 0.20),
+              "granite-3-2b": (2.5e9, 0.25), "qwen2-0.5b": (0.5e9, 0.25),
+              "falcon-mamba-7b": (7e9, 0.25), "zamba2-1.2b": (1.2e9, 0.35)}
+    for name, (target, tol) in expect.items():
+        n = param_count_estimate(get_config(name))
+        assert abs(n - target) / target < tol, f"{name}: {n/1e9:.2f}B vs {target/1e9}B"
+
+
+def test_smoke_param_counts_small():
+    for name in ARCH_NAMES:
+        cfg = get_config(name, smoke=True)
+        n = param_count_estimate(cfg)
+        assert n < 5e6, f"{name} smoke config too big: {n}"

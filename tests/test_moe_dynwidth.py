@@ -1,0 +1,97 @@
+"""MoE routing + the ESSR-style dynamic-width FFN."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LMConfig
+from repro.models.lm import ffn as F
+
+KEY = jax.random.PRNGKey(0)
+
+MOE_CFG = LMConfig(name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+                   n_kv_heads=2, d_ff=32, vocab_size=64, n_experts=4,
+                   n_experts_per_tok=2, moe_d_ff=32, capacity_factor=2.0)
+
+
+def test_moe_forward_shapes_and_finite():
+    p = F.init_moe(KEY, MOE_CFG, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    y, aux = F.moe_forward(p, x, MOE_CFG)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all() and np.isfinite(float(aux))
+
+
+def test_moe_with_shared_expert():
+    cfg = dataclasses.replace(MOE_CFG, n_shared_experts=1)
+    p = F.init_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    y, _ = F.moe_forward(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_grads_flow_to_experts_and_router():
+    p = F.init_moe(KEY, MOE_CFG, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+
+    def loss(p):
+        y, aux = F.moe_forward(p, x, MOE_CFG)
+        return jnp.mean(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).max()) > 0
+    assert float(jnp.abs(g["w_in"]).max()) > 0
+
+
+def test_moe_capacity_drops_tokens_when_tight():
+    """cf=0.1 forces drops; output must stay finite and dropped tokens get
+    only the shared-expert/zero contribution (never NaN)."""
+    cfg = dataclasses.replace(MOE_CFG, capacity_factor=0.1)
+    p = F.init_moe(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, 16))
+    y, _ = F.moe_forward(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # with tiny capacity some outputs are exactly zero rows
+    zero_rows = (np.abs(np.asarray(y)).sum(-1) == 0).sum()
+    assert zero_rows > 0
+
+
+def test_moe_capacity_sublane_aligned():
+    assert F.moe_capacity(4096, MOE_CFG) % 8 == 0
+
+
+# ---------------------------------------------------------------------------
+# dynamic width (the paper's technique for LMs)
+# ---------------------------------------------------------------------------
+
+def test_dynamic_width_full_capacity_equals_mlp():
+    p = F.init_mlp(KEY, 16, 32, "silu", jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    full = F.dynamic_width_ffn(p, x, "silu", capacity_frac=1.0)
+    ref = F.mlp(p, x, "silu")
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_dynamic_width_half_uses_shared_slice():
+    """Tokens routed to the narrow path must equal an explicit half-width MLP
+    built from the SAME weights (the C27 c C54 sharing rule)."""
+    p = F.init_mlp(KEY, 16, 32, "silu", jnp.float32)
+    x = jax.random.normal(KEY, (1, 8, 16))
+    out = F.dynamic_width_ffn(p, x, "silu", capacity_frac=0.25)
+    half = {"w_in": p["w_in"][:, :16], "w_gate": p["w_gate"][:, :16],
+            "w_out": p["w_out"][:16]}
+    ref_half = F.mlp(half, x, "silu")
+    scores = F.token_edge_score(x.reshape(-1, 16))
+    order = np.argsort(-np.asarray(scores))
+    narrow_tokens = order[2:]                     # capacity = 2 of 8
+    got = np.asarray(out).reshape(-1, 16)[narrow_tokens]
+    want = np.asarray(ref_half).reshape(-1, 16)[narrow_tokens]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_token_edge_score_orders_by_magnitude():
+    x = jnp.stack([jnp.ones(8) * 0.1, jnp.ones(8) * 5.0])
+    s = np.asarray(F.token_edge_score(x))
+    assert s[1] > s[0]

@@ -1,0 +1,79 @@
+"""Sharding rules: every spec must evenly divide its dim on the production
+meshes (validated abstractly — no devices needed)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, shape_applicable
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+
+
+class _FakeMesh:
+    """Quacks like a Mesh for spec GENERATION (shape + axis_names only)."""
+
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+
+
+def _mesh_info(multi):
+    shape = {"pod": 2, "data": 16, "model": 16} if multi else {"data": 16, "model": 16}
+    return SH.MeshInfo(_FakeMesh(shape), tuple(a for a in shape if a != "model"),
+                       "model")
+
+
+def _axis_size(mi, entry):
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return math.prod(mi.mesh.shape[n] for n in names)
+
+
+def _check_tree(specs, leaves, mi, where):
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(leaves)
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = _axis_size(mi, entry)
+            assert dim % size == 0, (
+                f"{where}: dim {dim} not divisible by {entry}({size}) "
+                f"for leaf {leaf.shape}, spec {spec}")
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible(arch, multi):
+    cfg = get_config(arch)
+    mi = _mesh_info(multi)
+    params = ST.abstract_params(cfg)
+    specs = SH.param_specs(params, cfg, mi)
+    _check_tree(specs, params, mi, f"{arch} params")
+
+
+@pytest.mark.parametrize("arch", ["grok-1-314b", "deepseek-v3-671b",
+                                  "falcon-mamba-7b", "zamba2-1.2b",
+                                  "seamless-m4t-medium"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    if not shape_applicable(cfg, shape)[0]:
+        pytest.skip("skip cell")
+    mi = _mesh_info(False)
+    caches = ST.abstract_caches(cfg, shape)
+    specs = SH.cache_specs(caches, cfg, mi, shape.global_batch)
+    _check_tree(specs, caches, mi, f"{arch} caches {shape_name}")
+
+
+def test_vocab_padding_always_shards():
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 512 == 0
+        assert cfg.vocab_padded >= cfg.vocab_size
+        assert cfg.vocab_padded % 16 == 0
