@@ -10,15 +10,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutionPlan, SREngine
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.core.pipeline import edge_selective_sr
 from repro.data.synthetic import degrade, patch_batches, random_image
-from repro.models.essr import ESSRConfig, essr_forward, init_essr
+from repro.models.essr import ESSRConfig, init_essr
 from repro.train import optimizer as O
 from repro.train.losses import psnr_y, ssim
 from repro.train.trainer import train_essr_supernet
 
-CACHE = os.environ.get("BENCH_CACHE", "/root/repo/results/bench_models")
+from repro.api.engine import DEFAULT_BENCH_CACHE as CACHE  # single source
 BENCH_STEPS = int(os.environ.get("BENCH_STEPS", "6000"))
 
 
@@ -45,6 +45,15 @@ def get_trained_essr(scale: int = 4, n_sfb: int = 5, steps: Optional[int] = None
     return params, cfg
 
 
+def get_engine(scale: int = 4, n_sfb: int = 5, steps: Optional[int] = None,
+               tag: str = "", plan: Optional[ExecutionPlan] = None,
+               backend: str = "ref") -> SREngine:
+    """`SREngine` over the cached briefly-trained benchmark supernet — the
+    one constructor every table benchmark shares."""
+    params, cfg = get_trained_essr(scale=scale, n_sfb=n_sfb, steps=steps, tag=tag)
+    return SREngine(params, cfg, plan=plan, backend=backend)
+
+
 def eval_frames(n: int = 3, hw: int = 96, scale: int = 4, seed: int = 777):
     """Held-out synthetic (lr, hr) frame pairs.
 
@@ -60,9 +69,24 @@ def eval_frames(n: int = 3, hw: int = 96, scale: int = 4, seed: int = 777):
     return out
 
 
+def mean_psnr_engine(engine: SREngine, frames,
+                     plan: Optional[ExecutionPlan] = None) -> Tuple[float, float]:
+    """(mean PSNR_Y, mean MAC saving) of the engine's edge-selective path."""
+    ps, sv = [], []
+    for lr, hr in frames:
+        res = engine.upscale(lr, plan=plan)
+        ps.append(float(psnr_y(res.image, hr)))
+        sv.append(res.mac_saving)
+    return float(np.mean(ps)), float(np.mean(sv))
+
+
 def mean_psnr_edge_selective(params, cfg, frames, t1=8.0, t2=40.0,
                              patch=32, overlap=2) -> Tuple[float, float]:
-    """(mean PSNR_Y, mean MAC saving) of the edge-selective pipeline."""
+    """Back-compat shim over the old free-function surface. Unlike
+    ``ExecutionPlan`` it stays permissive about inverted thresholds (t1 > t2),
+    exactly as the pre-SREngine code was; new code should use
+    ``get_engine()`` + ``mean_psnr_engine()``."""
+    from repro.core.pipeline import edge_selective_sr
     ps, sv = [], []
     for lr, hr in frames:
         res = edge_selective_sr(params, lr, cfg, t1=t1, t2=t2,

@@ -1,6 +1,7 @@
 """Paper Table XI: throughput/energy. No silicon here — we report
-(a) measured CPU patch throughput per subnet (pure-JAX and fused-kernel
-    paths), and
+(a) measured CPU frame throughput per subnet through `SREngine`, once per
+    backend ("ref" pure-JAX jit vs "pallas" fused kernel groups, interpret
+    mode on CPU), exercising the full patch->route->batch->fuse pipeline, and
 (b) the TPU-side projection from the dry-run roofline (results/dryrun),
     i.e. the frames/s one v5e chip supports at the measured bytes/flops.
 Power/gate count are N/A on CPU and stated as such."""
@@ -8,26 +9,27 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, get_trained_essr, timed
-from repro.kernels.ops import essr_forward_kernels
-from repro.models.essr import essr_forward
+from repro.api import SREngine
 
 
 def main():
-    params, cfg = get_trained_essr(scale=4)
-    x = jax.random.uniform(jax.random.PRNGKey(0), (32, 32, 32, 3))
+    hw, scale = 96, 4
+    frame = jax.random.uniform(jax.random.PRNGKey(0), (hw, hw, 3))
+    hr_pix = (hw * scale) ** 2
+    params, cfg = get_trained_essr(scale=scale)     # restore weights once
+    engines = {"jax": SREngine(params, cfg, backend="ref"),
+               "kernels": SREngine(params, cfg, backend="pallas")}
 
-    for width in (27, 54):
-        us = timed(lambda: essr_forward(params, x, cfg, width=width), reps=3)
-        pix = 32 * 32 * 32 * 16  # HR pixels per call (x4)
-        emit(f"table11_cpu_jax_c{width}", us, f"mpixels_per_s={pix/us:.2f}")
-        us_k = timed(lambda: essr_forward_kernels(params, x, cfg, width=width),
-                     reps=1)
-        emit(f"table11_cpu_kernels_c{width}", us_k,
-             f"mpixels_per_s={pix/us_k:.2f};note=interpret-mode(correctness path)")
+    for name, engine in engines.items():
+        for width in (27, 54):
+            reps = 3 if name == "jax" else 1
+            us = timed(lambda: engine.upscale(frame, mode="all_patches",
+                                              width=width).image, reps=reps)
+            note = "" if name == "jax" else ";note=interpret-mode(correctness path)"
+            emit(f"table11_cpu_{name}_c{width}", us,
+                 f"mpixels_per_s={hr_pix / us:.2f}{note}")
 
     # TPU projection from the dry-run artifact
     f = "/root/repo/results/dryrun/single/essr-x4__serve_8k.json"

@@ -2,17 +2,15 @@
 
 Exact param+MAC identities vs the paper for ESSR, pruned RLFN, FSRCNN;
 PSNR/SSIM measured on synthetic eval (absolute values differ from Set5 by
-dataset, orderings are the claim under test)."""
+dataset, orderings are the claim under test). The ESSR rows run through
+`SREngine.reference` (whole-frame convolution, per subnet width)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, eval_frames, get_trained_essr
-from repro.models.essr import ESSR_X2, ESSR_X4, essr_forward, essr_macs, \
-    essr_param_count
+from benchmarks.common import emit, eval_frames, get_engine
+from repro.models.essr import ESSR_X2, ESSR_X4, essr_macs, essr_param_count
 from repro.models.layers import bicubic_resize, bilinear_resize, count_params
-from repro.models.rlfn import RLFN_PRUNED_X4, init_rlfn, rlfn_forward, \
-    rlfn_macs_per_lr_pixel
+from repro.models.rlfn import RLFN_PRUNED_X4, init_rlfn, rlfn_macs_per_lr_pixel
 from repro.train.losses import psnr_y, ssim
 
 
@@ -35,14 +33,14 @@ def main():
          f"mac_reduction={reduction_m:.3f}(paper 0.83)")
 
     # quality ladder on synthetic eval
-    params, cfg = get_trained_essr(scale=scale)
+    engine = get_engine(scale=scale)
     rows = {}
     for name, fn in [
         ("bilinear", lambda lr: bilinear_resize(lr[None], scale)[0]),
         ("bicubic", lambda lr: bicubic_resize(lr[None], (lr.shape[0] * scale,
                                                          lr.shape[1] * scale))[0]),
-        ("essr_c27", lambda lr: essr_forward(params, lr[None], cfg, width=27)[0]),
-        ("essr_c54", lambda lr: essr_forward(params, lr[None], cfg, width=54)[0]),
+        ("essr_c27", lambda lr: engine.reference(lr, width=27).image),
+        ("essr_c54", lambda lr: engine.reference(lr, width=54).image),
     ]:
         ps = [float(psnr_y(fn(lr), hr)) for lr, hr in frames]
         ss = [float(ssim(fn(lr), hr)) for lr, hr in frames]

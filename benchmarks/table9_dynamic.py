@@ -1,20 +1,20 @@
 """Paper Table IX + the headline 50%-MACs/-0.1dB claim: MAC saving vs PSNR
-drop for threshold combinations, relative to the all-C54 pipeline."""
-import numpy as np
-
-from benchmarks.common import emit, eval_frames, get_trained_essr, \
-    mean_psnr_edge_selective
+drop for threshold combinations, relative to the all-C54 pipeline. All rows
+run through one `SREngine`; per-row thresholds are plan overrides."""
+from benchmarks.common import emit, eval_frames, get_engine, mean_psnr_engine
 
 COMBOS = [(8, 40), (8, 20), (8, 60), (8, 80), (15, 60), (15, 80)]
 
 
 def main():
-    params, cfg = get_trained_essr(scale=4)
+    engine = get_engine(scale=4)
     frames = eval_frames(n=3, hw=96)
-    base_psnr, _ = mean_psnr_edge_selective(params, cfg, frames, t1=0, t2=0)
+    base_psnr, _ = mean_psnr_engine(engine, frames,
+                                    plan=engine.plan.replace(t1=0, t2=0))
     emit("table9_all_c54_baseline", 0.0, f"psnr_y={base_psnr:.3f};saving=0")
     for t1, t2 in COMBOS:
-        p, s = mean_psnr_edge_selective(params, cfg, frames, t1=t1, t2=t2)
+        p, s = mean_psnr_engine(engine, frames,
+                                plan=engine.plan.replace(t1=t1, t2=t2))
         emit(f"table9_essr_{t1}+{t2}", 0.0,
              f"mac_saving={s:.3f};psnr_drop={base_psnr - p:.3f};psnr_y={p:.3f}")
 

@@ -2,23 +2,21 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's Fig. 1 inference path end-to-end: slim-overlap patches ->
-edge scores -> threshold routing (bilinear / C27 / C54, shared weights) ->
-overlap+average fusion — and prints the per-subnet routing + MAC saving.
+Walks the paper's Fig. 1 inference path end-to-end through the `SREngine`
+facade: slim-overlap patches -> edge scores -> threshold routing (bilinear /
+C27 / C54, shared weights) -> overlap+average fusion — and prints the
+per-subnet routing + MAC saving.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.pipeline import edge_selective_sr
+from repro.api import ExecutionPlan, SREngine
 from repro.core.subnet_policy import SUBNET_NAMES
 from repro.data.synthetic import degrade, random_image
-from repro.models.essr import ESSR_X4, init_essr
+from repro.models.essr import ESSR_X4
 from repro.train.losses import psnr_y
-from repro.models.layers import bilinear_resize
 
 
 def main():
@@ -27,18 +25,20 @@ def main():
     print(f"LR {lr.shape} -> SR x4 (paper's ESSR, C={ESSR_X4.channels}, "
           f"{ESSR_X4.n_sfb} SFBs, 53,886 params)")
 
-    params = init_essr(jax.random.PRNGKey(0), ESSR_X4)   # untrained demo weights
-    res = edge_selective_sr(params, lr, ESSR_X4, t1=8, t2=40)
+    # untrained demo weights; SREngine.from_checkpoint loads trained ones
+    engine = SREngine.from_config(ESSR_X4, plan=ExecutionPlan(t1=8, t2=40))
+    res = engine.upscale(lr)
 
-    print(f"patches: {len(res.ids)}  routing: "
+    print(f"patches: {res.n_patches}  routing: "
           + ", ".join(f"{n}={c}" for n, c in zip(SUBNET_NAMES, res.counts)))
     print(f"MAC saving vs all-C54: {res.mac_saving:.1%} "
           f"(paper: ~50% on Test8K at thresholds 8/40)")
     print(f"SR image: {res.image.shape}, "
           f"PSNR_Y vs ground truth {float(psnr_y(res.image, hr)):.2f} dB "
           f"(untrained weights — see examples/train_essr.py)")
+    bilinear = engine.reference(lr, width=0)     # whole-frame bilinear
     print(f"bilinear reference:      "
-          f"{float(psnr_y(bilinear_resize(lr[None], 4)[0], hr)):.2f} dB")
+          f"{float(psnr_y(bilinear.image, hr)):.2f} dB")
 
 
 if __name__ == "__main__":

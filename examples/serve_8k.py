@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python examples/serve_8k.py --frames 4 --hw 96
 
-Streams synthetic frames through the FrameServer: per-frame edge scores,
-resource-adaptive thresholds (the C54/sec ceiling demotes overflow patches
-to C27 — throughput guaranteed, quality floor kept), per-subnet batched
-execution, overlap+average fusion. Prints Table-XI-style summary.
+Streams synthetic frames through ``SREngine`` (constructed by the launcher
+via ``SREngine.from_checkpoint``): per-frame edge scores, resource-adaptive
+thresholds (the C54/sec ceiling demotes overflow patches to C27 — throughput
+guaranteed, quality floor kept), per-subnet batched execution,
+overlap+average fusion. Prints Table-XI-style summary. Accepts every
+``repro.launch.serve`` flag (--ckpt, --budget, --backend, --deadline-ms).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: the repo's verify command plus a 2-frame SREngine stream.
+# Usage: bash scripts/smoke.sh   (from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== SREngine 2-frame stream smoke =="
+python - <<'PY'
+import jax.numpy as jnp
+from repro.api import SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+
+engine = SREngine.from_config(ESSRConfig(scale=2))
+frames = [degrade(jnp.asarray(random_image(i, 128, 128)), 2) for i in range(2)]
+results = list(engine.stream(frames))
+assert len(results) == 2
+assert all(r.image.shape == (128, 128, 3) for r in results)
+summary = engine.summary()
+assert summary["frames"] == 2
+print("stream smoke OK:", summary)
+PY
+
+echo "smoke OK"

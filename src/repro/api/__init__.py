@@ -1,0 +1,13 @@
+"""Public inference API: one engine, one plan, one result shape.
+
+    from repro.api import SREngine, ExecutionPlan
+
+    engine = SREngine.from_checkpoint(scale=4)
+    result = engine.upscale(lr_frame)            # FrameResult
+    for r in engine.stream(frames): ...          # Algorithm-1 serving
+"""
+from repro.api.engine import SREngine
+from repro.api.plan import ExecutionPlan, SUBNET_POLICIES
+from repro.api.result import FrameResult
+
+__all__ = ["SREngine", "ExecutionPlan", "FrameResult", "SUBNET_POLICIES"]

@@ -1,0 +1,262 @@
+"""SREngine — the single facade over every ESSR inference entry point.
+
+One engine owns:
+  * ``params``  — the supernet weights (all subnets weight-shared, Sec. II-B),
+  * ``cfg``     — the `ESSRConfig` architecture description,
+  * ``plan``    — an `ExecutionPlan` (patch geometry, thresholds, bucket
+                  schedule, subnet policy), frozen at construction,
+  * ``backend`` — "ref" (pure-JAX jit) or "pallas" (fused kernel groups),
+                  chosen ONCE instead of per call.
+
+and exposes the paper's modes as methods returning one `FrameResult` shape:
+
+  * ``upscale(frame)``                    — Fig. 1 edge-selective pipeline
+  * ``upscale(frame, mode="all_patches")``— every patch through one subnet
+  * ``reference(frame)``                  — whole-image convolution (Table III)
+  * ``stream(frames)``                    — Algorithm-1 adaptive serving with
+                                            deadline/straggler handling
+
+Construction absorbs the checkpoint / cached-bench-model discovery that was
+previously copy-pasted across `launch/serve.py` and the benchmarks:
+``SREngine.from_config`` (fresh init) and ``SREngine.from_checkpoint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import os
+import re
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+import numpy as np
+import jax
+
+from repro.api.plan import ExecutionPlan
+from repro.api.result import FrameResult, summarize_stats
+from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
+from repro.core.edge_score import edge_score
+from repro.core.patching import extract_patches
+from repro.core.pipeline import (edge_selective_sr, resolve_backend,
+                                 sr_all_patches_result, sr_whole)
+from repro.models.essr import ESSRConfig, init_essr
+
+#: Default location of the cached briefly-trained benchmark supernets
+#: (written by benchmarks/common.get_trained_essr).
+DEFAULT_BENCH_CACHE = os.environ.get("BENCH_CACHE", "/root/repo/results/bench_models")
+
+MODES = ("edge_select", "all_patches", "whole")
+
+
+class SREngine:
+    """Facade over the ESSR inference pipeline. See module docstring."""
+
+    def __init__(self, params: Dict[str, Any], cfg: ESSRConfig,
+                 plan: Optional[ExecutionPlan] = None, backend: str = "ref",
+                 switching: Optional[SwitchingConfig] = None,
+                 deadline_s: Optional[float] = None):
+        resolve_backend(backend)            # fail fast on typos
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan if plan is not None else ExecutionPlan()
+        self.backend = backend
+        self.deadline_s = deadline_s
+        self.switcher = AdaptiveSwitcher(
+            switching if switching is not None
+            else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
+        self.stats: List[FrameResult] = []
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg: Optional[ESSRConfig] = None, *, seed: int = 0,
+                    plan: Optional[ExecutionPlan] = None, backend: str = "ref",
+                    switching: Optional[SwitchingConfig] = None,
+                    deadline_s: Optional[float] = None) -> "SREngine":
+        """Fresh engine with randomly initialised supernet weights."""
+        cfg = cfg if cfg is not None else ESSRConfig()
+        params = init_essr(jax.random.PRNGKey(seed), cfg)
+        return cls(params, cfg, plan=plan, backend=backend,
+                   switching=switching, deadline_s=deadline_s)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: Optional[str] = None, *,
+                        cfg: Optional[ESSRConfig] = None, scale: int = 4,
+                        prefer: str = "ema",
+                        bench_cache: Optional[str] = DEFAULT_BENCH_CACHE,
+                        plan: Optional[ExecutionPlan] = None,
+                        backend: str = "ref",
+                        switching: Optional[SwitchingConfig] = None,
+                        deadline_s: Optional[float] = None,
+                        verbose: bool = False) -> "SREngine":
+        """Engine with trained weights, resolved in priority order:
+
+        1. ``ckpt_dir`` — a train.py checkpoint holding {"params", "ema"};
+           ``prefer`` selects which tree serves ("ema" by default).
+        2. the newest cached benchmark supernet under ``bench_cache``
+           matching this config (``essr_x<scale>_sfb<n>_*``);
+        3. fresh random init (so demos never hard-fail on a cold cache).
+        """
+        from repro.ckpt.checkpoint import CheckpointManager
+
+        cfg = cfg if cfg is not None else ESSRConfig(scale=scale)
+        params = init_essr(jax.random.PRNGKey(0), cfg)
+        if ckpt_dir:
+            restored, _ = CheckpointManager(ckpt_dir).restore(
+                {"params": params, "ema": params})
+            params = restored[prefer]
+            if verbose:
+                print(f"(restored {prefer!r} weights from {ckpt_dir})")
+        elif bench_cache:
+            pattern = os.path.join(bench_cache, f"essr_x{cfg.scale}_sfb{cfg.n_sfb}_*")
+
+            def _steps(d: str) -> int:
+                # names are essr_x<scale>_sfb<n>_<steps><tag>; "newest" means
+                # highest step count, not lexicographic order (800 > 6000)
+                m = re.match(r"(\d+)", d.rsplit("_", 1)[-1])
+                return int(m.group(1)) if m else -1
+
+            for cand in sorted(glob.glob(pattern), key=_steps, reverse=True):
+                try:
+                    restored, _ = CheckpointManager(cand).restore({"params": params})
+                    params = restored["params"]
+                    if verbose:
+                        print(f"(using trained weights from {cand})")
+                    break
+                except Exception:
+                    continue
+        return cls(params, cfg, plan=plan, backend=backend,
+                   switching=switching, deadline_s=deadline_s)
+
+    # -- single-frame inference ---------------------------------------------
+
+    def upscale(self, frame: jax.Array, mode: str = "edge_select",
+                width: Optional[int] = None,
+                ids_override: Optional[np.ndarray] = None,
+                plan: Optional[ExecutionPlan] = None) -> FrameResult:
+        """One frame through the pipeline. ``frame``: (H,W,3) in [0,1].
+
+        ``mode``:
+          * "edge_select"  — routing per the plan's subnet policy (or an
+            explicit ``ids_override``);
+          * "all_patches"  — every patch through the subnet of ``width``
+            (the non-edge-selective ablation reference);
+          * "whole"        — whole-image convolution, no patching (the
+            lossless software reference; ``width`` optional).
+
+        ``plan`` overrides the engine's plan for this call only (benchmark
+        sweeps over the patch-based modes; "whole" has no plan knobs).
+        """
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
+        if mode == "edge_select" and width is not None:
+            raise ValueError("width only applies to mode='all_patches'/'whole'; "
+                             "for forced routing use mode='all_patches'")
+        if mode != "edge_select" and ids_override is not None:
+            raise ValueError("ids_override requires mode='edge_select'")
+        p = plan if plan is not None else self.plan
+        t0 = time.perf_counter()
+
+        widths = self.cfg.subnet_widths()
+        if mode == "whole":
+            if width is not None and width not in widths:
+                raise ValueError(f"mode='whole' needs width in {widths} "
+                                 f"(or None for full), got {width}")
+            img = sr_whole(self.params, frame, self.cfg, width=width)
+            img.block_until_ready()
+            # sr_whole always runs the pure-JAX path; label it honestly
+            return FrameResult(image=img, mode=mode, backend="ref",
+                               latency_s=time.perf_counter() - t0)
+
+        scored = False
+        routed_by_thresholds = False
+        result_mode = mode
+        if mode == "all_patches":
+            if width not in widths:
+                raise ValueError(f"mode='all_patches' needs width in {widths}, "
+                                 f"got {width}")
+            res = sr_all_patches_result(self.params, frame, self.cfg, width,
+                                        patch=p.patch, overlap=p.overlap,
+                                        buckets=p.buckets, backend=self.backend)
+        elif ids_override is None and p.subnet_policy != "threshold":
+            # forced policies ignore edge scores — reuse the no-scoring path;
+            # plan.decide is the single policy-name -> subnet-id mapping.
+            # Label what actually ran, so consumers keying on mode don't
+            # expect edge scores from a forced run.
+            result_mode = "all_patches"
+            forced = widths[int(p.decide(np.zeros(1))[0])]
+            res = sr_all_patches_result(self.params, frame, self.cfg, forced,
+                                        patch=p.patch, overlap=p.overlap,
+                                        buckets=p.buckets, backend=self.backend)
+        else:
+            scored = True
+            routed_by_thresholds = ids_override is None
+            res = edge_selective_sr(self.params, frame, self.cfg,
+                                    t1=p.t1, t2=p.t2,
+                                    patch=p.patch, overlap=p.overlap,
+                                    ids_override=ids_override,
+                                    buckets=p.buckets, backend=self.backend)
+        res.image.block_until_ready()
+        return FrameResult(image=res.image, mode=result_mode,
+                           backend=self.backend, ids=res.ids,
+                           scores=res.scores if scored else None,
+                           counts=res.counts, mac_saving=res.mac_saving,
+                           latency_s=time.perf_counter() - t0,
+                           # thresholds only meaningful when routing used them
+                           thresholds=(p.thresholds if routed_by_thresholds
+                                       else (0.0, 0.0)))
+
+    def reference(self, frame: jax.Array, width: Optional[int] = None) -> FrameResult:
+        """Whole-image convolution — the lossless reference of Table III."""
+        return self.upscale(frame, mode="whole", width=width)
+
+    # -- streaming (Algorithm 1 + deadline control loop) ---------------------
+
+    def serve(self, frame: jax.Array) -> FrameResult:
+        """One frame of the adaptive stream: edge scores -> Algorithm-1
+        thresholds (with per-second C54 ceiling) -> edge-selective SR.
+        Appends to ``self.stats``; a missed deadline raises the thresholds
+        (the paper's resource-adaptive mechanism as straggler mitigation)."""
+        if self.plan.subnet_policy != "threshold":
+            raise ValueError(
+                f"streaming routes adaptively and cannot honour forced "
+                f"subnet_policy {self.plan.subnet_policy!r}; use upscale() "
+                f"for forced routing")
+        t0 = time.perf_counter()
+        patches, pos = extract_patches(frame, self.plan.patch, self.plan.overlap)
+        scores = np.asarray(edge_score(patches))
+        ids = self.switcher.assign(scores)
+        res = edge_selective_sr(self.params, frame, self.cfg,
+                                patch=self.plan.patch, overlap=self.plan.overlap,
+                                ids_override=ids, buckets=self.plan.buckets,
+                                backend=self.backend,
+                                precomputed=(patches, pos, scores))
+        res.image.block_until_ready()
+        dt = time.perf_counter() - t0
+        missed = bool(self.deadline_s and dt > self.deadline_s)
+        if missed:
+            self.switcher.demote_for_straggler(severity=1.0)
+        out = FrameResult(image=res.image, mode="edge_select",
+                          backend=self.backend, ids=ids, scores=scores,
+                          counts=res.counts, mac_saving=res.mac_saving,
+                          latency_s=dt, thresholds=self.switcher.thresholds,
+                          deadline_missed=missed)
+        # retain only the compact record: holding every SR image would grow
+        # unboundedly over a long stream (one 8K frame is ~100s of MB)
+        self.stats.append(dataclasses.replace(out, image=None,
+                                              ids=None, scores=None))
+        return out
+
+    def stream(self, frames: Iterable[jax.Array]) -> Iterator[FrameResult]:
+        """Serve a frame stream; yields one FrameResult per frame."""
+        for frame in frames:
+            yield self.serve(frame)
+
+    # -- aggregate reporting -------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        """Table-XI-style aggregate over all streamed frames."""
+        s = summarize_stats(self.stats)
+        if s:
+            s["backend"] = self.backend
+        return s

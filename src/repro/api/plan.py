@@ -1,0 +1,70 @@
+"""ExecutionPlan — the frozen, hashable description of HOW a frame is run.
+
+Consolidates every knob that used to travel as loose keyword arguments
+through `edge_selective_sr` / `FrameServer` / the benchmark helpers:
+patch geometry, edge thresholds, the jit bucket schedule, and the subnet
+policy. One plan == one compilation/routing regime; `SREngine` holds
+exactly one and every call reuses it (override per call with
+``plan.replace(...)`` only when a benchmark sweeps a knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import subnet_policy as sp
+from repro.core.pipeline import DEFAULT_BUCKETS
+
+#: Subnet-policy names accepted by :class:`ExecutionPlan`.
+#: ``threshold``     — paper Sec. II-C routing on the (t1, t2) edge thresholds
+#: ``all_bilinear``  / ``all_c27`` / ``all_c54`` — force every patch through
+#:                     one subnet (the ablation references of Tables III/IX).
+SUBNET_POLICIES = ("threshold", "all_bilinear", "all_c27", "all_c54")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    patch: int = 32
+    overlap: int = 2
+    t1: float = sp.DEFAULT_T1
+    t2: float = sp.DEFAULT_T2
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    subnet_policy: str = "threshold"
+
+    def __post_init__(self):
+        # keep the frozen/hashable contract even when callers pass a list
+        object.__setattr__(self, "buckets", tuple(self.buckets))
+        if self.subnet_policy not in SUBNET_POLICIES:
+            raise ValueError(f"subnet_policy {self.subnet_policy!r} not in "
+                             f"{SUBNET_POLICIES}")
+        if self.overlap >= self.patch:
+            raise ValueError(f"overlap {self.overlap} must be < patch {self.patch}")
+        if self.t2 < self.t1:
+            raise ValueError(f"t2 {self.t2} must be >= t1 {self.t1}")
+        if (not self.buckets or any(b <= 0 for b in self.buckets)
+                or list(self.buckets) != sorted(set(self.buckets))):
+            raise ValueError(f"buckets must be ascending positive ints, "
+                             f"got {self.buckets}")
+
+    def replace(self, **kw) -> "ExecutionPlan":
+        """Functional update (plans are frozen)."""
+        return dataclasses.replace(self, **kw)
+
+    def decide(self, scores: np.ndarray) -> np.ndarray:
+        """Edge scores -> subnet ids under this plan's policy.
+
+        (The streaming path does not use this: there `AdaptiveSwitcher.assign`
+        owns the live thresholds and the per-second C54 ceiling.)
+        """
+        scores = np.asarray(scores)
+        if self.subnet_policy == "threshold":
+            return np.asarray(sp.decide(scores, self.t1, self.t2))
+        fixed = {"all_bilinear": sp.BILINEAR, "all_c27": sp.C27,
+                 "all_c54": sp.C54}[self.subnet_policy]
+        return np.full(scores.shape, fixed, dtype=np.int64)
+
+    @property
+    def thresholds(self) -> Tuple[float, float]:
+        return (self.t1, self.t2)

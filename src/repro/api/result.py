@@ -1,0 +1,59 @@
+"""FrameResult — the one structured return type of every SREngine call.
+
+Replaces the previous zoo of shapes: `SRResult` (edge_selective_sr), bare
+`jax.Array` (sr_whole / sr_all_patches / FrameServer.serve_frame) and
+side-channel `FrameStats`. Fields that a mode does not produce (e.g. edge
+scores for whole-frame reference) are None / zero rather than absent, so
+downstream code can treat all modes uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+
+
+@dataclasses.dataclass
+class FrameResult:
+    # image is None only in the compact records SREngine.stats retains
+    # (holding every streamed SR frame would grow without bound)
+    image: Optional[jax.Array]                # (H*s, W*s, 3)
+    mode: str                                 # "edge_select"|"all_patches"|"whole"
+    backend: str                              # "ref" | "pallas"
+    ids: Optional[np.ndarray] = None          # (N,) subnet id per patch
+    scores: Optional[np.ndarray] = None       # (N,) edge score per patch
+    counts: Tuple[int, int, int] = (0, 0, 0)  # (bilinear, C27, C54) patches
+    mac_saving: float = 0.0                   # vs all-C54 pipeline
+    latency_s: float = 0.0                    # wall-clock incl. device sync
+    # (t1, t2): for upscale() the values used for routing ((0,0) when routing
+    # ignored them); for streamed frames the switcher's live thresholds AFTER
+    # this frame's adaptation (matching the old FrameServer/ summary()
+    # "final_thresholds" semantics)
+    thresholds: Tuple[float, float] = (0.0, 0.0)
+    deadline_missed: bool = False             # streaming only
+
+    @property
+    def n_patches(self) -> int:
+        return 0 if self.ids is None else int(len(self.ids))
+
+
+def summarize_stats(stats) -> dict:
+    """Table-XI-style aggregate over frame records (FrameResult or any
+    object with counts/mac_saving/latency_s/thresholds/deadline_missed).
+    Shared by `SREngine.summary` and the legacy `FrameServer` shim."""
+    from repro.core import subnet_policy as sp
+    if not stats:
+        return {}
+    counts = np.array([s.counts for s in stats])
+    total = counts.sum()
+    return {
+        "frames": len(stats),
+        "subnet_share": dict(zip(sp.SUBNET_NAMES,
+                                 (counts.sum(0) / max(total, 1)).round(4).tolist())),
+        "mean_mac_saving": float(np.mean([s.mac_saving for s in stats])),
+        "mean_latency_s": float(np.mean([s.latency_s for s in stats])),
+        "deadline_misses": int(sum(s.deadline_missed for s in stats)),
+        "final_thresholds": stats[-1].thresholds,
+    }

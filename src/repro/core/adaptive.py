@@ -40,8 +40,8 @@ class SwitchingConfig:
 class AdaptiveSwitcher:
     """Stateful Algorithm-1 controller. One instance per stream (or shard)."""
 
-    def __init__(self, cfg: SwitchingConfig = SwitchingConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[SwitchingConfig] = None):
+        self.cfg = cfg = cfg if cfg is not None else SwitchingConfig()
         self.t1 = float(cfg.t1)
         self.t2 = float(cfg.t2)
         self._c54_this_second = 0

@@ -25,7 +25,10 @@ from repro.core.patching import extract_patches, fuse_patches_average
 from repro.models.essr import ESSRConfig, essr_forward
 
 
-def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
@@ -35,6 +38,28 @@ def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)) ->
 @functools.partial(jax.jit, static_argnames=("cfg", "width"))
 def _forward_width(params, patches, cfg: ESSRConfig, width: int):
     return essr_forward(params, patches, cfg, width=width)
+
+
+def _forward_width_pallas(params, patches, cfg: ESSRConfig, width: int):
+    """Fused-kernel backend: same contract as ``_forward_width``.
+
+    Bilinear patches never reach the conv kernels (handled by the router on
+    the ASIC), so width 0 falls back to the reference resize."""
+    from repro.kernels.ops import essr_forward_kernels
+    from repro.models.layers import bilinear_resize
+    if width == 0:
+        return bilinear_resize(patches, cfg.scale)
+    return essr_forward_kernels(params, patches, cfg, width=width)
+
+
+BACKENDS = {"ref": _forward_width, "pallas": _forward_width_pallas}
+
+
+def resolve_backend(name: str):
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; choose from {sorted(BACKENDS)}")
 
 
 @dataclasses.dataclass
@@ -49,10 +74,24 @@ class SRResult:
 def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
                       t1: float = sp.DEFAULT_T1, t2: float = sp.DEFAULT_T2,
                       patch: int = 32, overlap: int = 2,
-                      ids_override: Optional[np.ndarray] = None) -> SRResult:
-    """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image."""
-    patches, pos = extract_patches(frame, patch=patch, overlap=overlap)
-    scores = np.asarray(edge_score(patches))
+                      ids_override: Optional[np.ndarray] = None,
+                      buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                      backend: str = "ref",
+                      precomputed: Optional[Tuple[jax.Array, np.ndarray,
+                                                  np.ndarray]] = None) -> SRResult:
+    """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image.
+
+    ``precomputed``: optional (patches, pos, scores) from a caller that
+    already extracted/scored this frame (the streaming path scores patches
+    for the adaptive switcher) — avoids doing that work twice per frame.
+    """
+    forward = resolve_backend(backend)
+    if precomputed is not None:
+        patches, pos, scores = precomputed
+        scores = np.asarray(scores)
+    else:
+        patches, pos = extract_patches(frame, patch=patch, overlap=overlap)
+        scores = np.asarray(edge_score(patches))
     ids = ids_override if ids_override is not None else np.asarray(sp.decide(scores, t1, t2))
 
     s = cfg.scale
@@ -62,9 +101,9 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
         idx = np.flatnonzero(ids == k)
         if idx.size == 0:
             continue
-        cap = _bucket(idx.size)
+        cap = _bucket(idx.size, buckets)
         pad = np.concatenate([idx, np.zeros(cap - idx.size, dtype=idx.dtype)])
-        sr = _forward_width(params, patches[pad], cfg, width)[: idx.size]
+        sr = forward(params, patches[pad], cfg, width)[: idx.size]
         out_patches = out_patches.at[idx].set(sr)
 
     h, w = int(frame.shape[0]) * s, int(frame.shape[1]) * s
@@ -74,15 +113,32 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
     return SRResult(image=img, ids=ids, scores=scores, counts=counts, mac_saving=saving)
 
 
+def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
+                          patch: int = 32, overlap: int = 2,
+                          buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                          backend: str = "ref") -> SRResult:
+    """Every patch through one subnet (the non-edge-selective reference).
+
+    The single implementation of forced routing — the edge-score pass is
+    skipped entirely (scores are reported as zeros)."""
+    widths = cfg.subnet_widths()
+    if width not in widths:
+        raise ValueError(f"width {width} not one of the subnet widths {widths}")
+    patches, pos = extract_patches(frame, patch, overlap)
+    ids = np.full((len(pos),), widths.index(width), dtype=np.int64)
+    return edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
+                             ids_override=ids, buckets=buckets, backend=backend,
+                             precomputed=(patches, pos,
+                                          np.zeros(len(pos), np.float32)))
+
+
 def sr_all_patches(params, frame, cfg: ESSRConfig, width: int,
-                   patch: int = 32, overlap: int = 2) -> jax.Array:
-    """Every patch through one subnet (the non-edge-selective reference)."""
-    n = frame.shape[0]
-    res = edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
-                            ids_override=np.full((len(extract_patches(frame, patch, overlap)[1]),),
-                                                 {0: 0, cfg.channels // 2: 1, cfg.channels: 2}[width],
-                                                 dtype=np.int64))
-    return res.image
+                   patch: int = 32, overlap: int = 2,
+                   backend: str = "ref") -> jax.Array:
+    """Image-only wrapper over ``sr_all_patches_result``."""
+    return sr_all_patches_result(params, frame, cfg, width,
+                                 patch=patch, overlap=overlap,
+                                 backend=backend).image
 
 
 def sr_whole(params, frame, cfg: ESSRConfig, width: Optional[int] = None) -> jax.Array:

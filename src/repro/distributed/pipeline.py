@@ -22,6 +22,10 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+# jax < 0.6 has no lax.pvary (no varying-manual-axes tracking) — identity is
+# the correct degenerate form there
+_pvary = getattr(lax, "pvary", lambda x, axes: x)
+
 
 def pipelined_forward(mesh: Mesh, stage_fn: Callable, params_stacked: Any,
                       x_micro: jax.Array, n_stages: int):
@@ -42,9 +46,9 @@ def pipelined_forward(mesh: Mesh, stage_fn: Callable, params_stacked: Any,
         stage = lax.axis_index("pod")
         # registers must be marked pod-varying up-front so scan/cond branches
         # agree on the manual-axes type (shard_map vma rules)
-        state = lax.pvary(jnp.zeros_like(xs[0]), ("pod",))
-        outputs = lax.pvary(jnp.zeros_like(xs), ("pod",))
-        xs = lax.pvary(xs, ("pod",))
+        state = _pvary(jnp.zeros_like(xs[0]), ("pod",))
+        outputs = _pvary(jnp.zeros_like(xs), ("pod",))
+        xs = _pvary(xs, ("pod",))
 
         def tick(carry, t):
             state, outputs = carry

@@ -5,7 +5,17 @@ state; the dry-run sets XLA_FLAGS before any jax import (dryrun.py)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int):
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:                     # older jax: every axis is Auto already
+    AxisType = None
+
+    def _axis_kw(n: int):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,9 +24,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     the optional pipeline mode maps stages onto it instead)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU distributed tests (requires >=4 host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))

@@ -1,8 +1,9 @@
 """Serving launcher: the paper's deployment loop at reduced scale.
 
-Streams synthetic frames through the FrameServer (edge scores -> Algorithm-1
-adaptive thresholds -> per-subnet batched ESSR -> overlap+average fusion) and
-prints the Table-XI-style summary (subnet shares, MAC saving, latency).
+Streams synthetic frames through ``SREngine.stream`` (edge scores ->
+Algorithm-1 adaptive thresholds -> per-subnet batched ESSR -> overlap+average
+fusion) and prints the Table-XI-style summary (subnet shares, MAC saving,
+latency).
 
     PYTHONPATH=src python -m repro.launch.serve --frames 4 --hw 96
 """
@@ -10,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,50 +23,37 @@ def main():
     ap.add_argument("--ckpt", default=None, help="checkpoint dir from train.py")
     ap.add_argument("--budget", type=int, default=25500)
     ap.add_argument("--deadline-ms", type=float, default=0.0)
+    ap.add_argument("--backend", default="ref", choices=("ref", "pallas"),
+                    help="forward path: pure-JAX jit or fused Pallas kernels")
     args = ap.parse_args()
 
+    from repro.api import SREngine
     from repro.core.adaptive import SwitchingConfig
     from repro.data.synthetic import degrade, random_image
-    from repro.models.essr import ESSRConfig, init_essr
-    from repro.runtime.serving import FrameServer
+    from repro.models.essr import ESSRConfig
     from repro.train.losses import psnr_y
-
-    cfg = ESSRConfig(scale=args.scale)
-    params = init_essr(jax.random.PRNGKey(0), cfg)
-    if args.ckpt:
-        from repro.ckpt.checkpoint import CheckpointManager
-        tmpl = {"params": params, "ema": params}
-        restored, _ = CheckpointManager(args.ckpt).restore(tmpl)
-        params = restored["ema"]
-    else:
-        # use the cached benchmark supernet if one exists
-        import glob, os
-        cands = sorted(glob.glob(f"/root/repo/results/bench_models/essr_x{args.scale}_sfb5_*"))
-        if cands:
-            from repro.ckpt.checkpoint import CheckpointManager
-            try:
-                restored, _ = CheckpointManager(cands[-1]).restore({"params": params})
-                params = restored["params"]
-                print(f"(using trained weights from {cands[-1]})")
-            except Exception:
-                pass
 
     # frame counts scaled down from 8K: thresholds adapt around per-frame C54 share
     n_patches = (args.hw // 30 + 1) ** 2
     sw = SwitchingConfig(c54_per_sec_budget=args.budget,
                          frame_high=max(2, int(n_patches * 0.45)),
                          frame_low=max(1, int(n_patches * 0.30)))
-    server = FrameServer(params, cfg, sw,
-                         deadline_s=args.deadline_ms / 1e3 or None)
+    engine = SREngine.from_checkpoint(
+        args.ckpt, cfg=ESSRConfig(scale=args.scale), backend=args.backend,
+        switching=sw, deadline_s=args.deadline_ms / 1e3 or None, verbose=True)
+
+    def frames():
+        for i in range(args.frames):
+            hr = jnp.asarray(random_image(100 + i, args.hw * args.scale,
+                                          args.hw * args.scale))
+            yield hr, degrade(hr, args.scale)
 
     psnrs = []
-    for i in range(args.frames):
-        hr = jnp.asarray(random_image(100 + i, args.hw * args.scale, args.hw * args.scale))
-        lr = degrade(hr, args.scale)
-        sr = server.serve_frame(lr)
-        psnrs.append(float(psnr_y(sr, hr)))
-        print(f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  thresholds={server.switcher.thresholds}")
-    s = server.summary()
+    for i, (hr, lr) in enumerate(frames()):
+        res = engine.serve(lr)
+        psnrs.append(float(psnr_y(res.image, hr)))
+        print(f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  thresholds={res.thresholds}")
+    s = engine.summary()
     print("\nsummary:", {k: v for k, v in s.items()})
     print(f"mean PSNR_Y {np.mean(psnrs):.2f} dB")
 

@@ -1,25 +1,25 @@
-"""SR frame-serving runtime (the paper's deployment: 8K@30FPS, x4).
+"""SR frame-serving runtime — DEPRECATED shim over `repro.api.SREngine`.
 
-frame stream -> AdaptiveSwitcher (Algorithm 1) -> edge-selective SR ->
-fused frame. Tracks the quantities the paper's hardware section reports:
-per-subnet patch counts and cycle shares, MAC savings, deadline behaviour.
+The serving loop (frame stream -> AdaptiveSwitcher (Algorithm 1) ->
+edge-selective SR -> fused frame, with deadline/straggler handling) now
+lives in ``SREngine.stream`` / ``SREngine.serve``. `FrameServer` remains as
+a thin compatibility wrapper so existing call sites keep working; new code
+should construct an `SREngine` directly:
 
-Straggler mitigation: if a frame exceeds its deadline budget, the switcher's
-thresholds rise (demote future patches) — the paper's resource-adaptive
-mechanism used as a runtime control loop.
+    from repro.api import SREngine, ExecutionPlan
+    engine = SREngine(params, cfg, plan=ExecutionPlan(), switching=sw)
+    for result in engine.stream(frames): ...
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, Iterator, List, Optional
+import warnings
+from typing import Any, Dict, List, Optional
 
-import numpy as np
-import jax
-
+from repro.api.engine import SREngine
+from repro.api.plan import ExecutionPlan
+from repro.api.result import summarize_stats
 from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
-from repro.core.pipeline import edge_selective_sr
-from repro.core import subnet_policy as sp
 from repro.models.essr import ESSRConfig
 
 
@@ -33,47 +33,69 @@ class FrameStats:
 
 
 class FrameServer:
+    """Deprecated: use ``repro.api.SREngine`` (see module docstring)."""
+
     def __init__(self, params, cfg: ESSRConfig,
-                 switching: SwitchingConfig = SwitchingConfig(),
+                 switching: Optional[SwitchingConfig] = None,
                  patch: int = 32, overlap: int = 2,
                  deadline_s: Optional[float] = None):
-        self.params = params
-        self.cfg = cfg
-        self.switcher = AdaptiveSwitcher(switching)
-        self.patch, self.overlap = patch, overlap
-        self.deadline_s = deadline_s
-        self.stats: List[FrameStats] = []
+        warnings.warn(
+            "FrameServer is deprecated; use repro.api.SREngine.stream()",
+            DeprecationWarning, stacklevel=2)
+        self.engine = SREngine(params, cfg,
+                               plan=ExecutionPlan(patch=patch, overlap=overlap),
+                               switching=switching, deadline_s=deadline_s)
+        self._stats: List[FrameStats] = []       # incremental mirror
+        self._mirrored = 0                       # engine records consumed
+
+    # old attribute surface, delegated ---------------------------------------
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def cfg(self) -> ESSRConfig:
+        return self.engine.cfg
+
+    @property
+    def switcher(self) -> AdaptiveSwitcher:
+        return self.engine.switcher
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        return self.engine.deadline_s
+
+    @property
+    def patch(self) -> int:
+        return self.engine.plan.patch
+
+    @property
+    def overlap(self) -> int:
+        return self.engine.plan.overlap
+
+    @property
+    def stats(self) -> List[FrameStats]:
+        new = self.engine.stats[self._mirrored:]
+        self._mirrored = len(self.engine.stats)
+        self._stats.extend(FrameStats(r.counts, r.mac_saving, r.latency_s,
+                                      r.thresholds, r.deadline_missed)
+                           for r in new)
+        return self._stats
+
+    @stats.setter
+    def stats(self, value: List[FrameStats]) -> None:
+        # old code allowed `server.stats = []` to reset a stats window
+        self._stats = value if isinstance(value, list) else list(value)
+        self._mirrored = len(self.engine.stats)
 
     def serve_frame(self, frame) -> Any:
-        from repro.core.patching import extract_patches
-        from repro.core.edge_score import edge_score
-
-        t0 = time.perf_counter()
-        patches, _ = extract_patches(frame, self.patch, self.overlap)
-        scores = np.asarray(edge_score(patches))
-        ids = self.switcher.assign(scores)
-        res = edge_selective_sr(self.params, frame, self.cfg,
-                                patch=self.patch, overlap=self.overlap,
-                                ids_override=ids)
-        res.image.block_until_ready()
-        dt = time.perf_counter() - t0
-        missed = bool(self.deadline_s and dt > self.deadline_s)
-        if missed:
-            self.switcher.demote_for_straggler(severity=1.0)
-        self.stats.append(FrameStats(res.counts, res.mac_saving, dt,
-                                     self.switcher.thresholds, missed))
-        return res.image
+        image = self.engine.serve(frame).image
+        _ = self.stats      # eager refresh: held references see the append,
+        return image        # matching the old in-place list semantics
 
     def summary(self) -> Dict[str, Any]:
-        if not self.stats:
-            return {}
-        counts = np.array([s.counts for s in self.stats])
-        total = counts.sum()
-        return {
-            "frames": len(self.stats),
-            "subnet_share": dict(zip(sp.SUBNET_NAMES, (counts.sum(0) / max(total, 1)).round(4).tolist())),
-            "mean_mac_saving": float(np.mean([s.mac_saving for s in self.stats])),
-            "mean_latency_s": float(np.mean([s.latency_s for s in self.stats])),
-            "deadline_misses": int(sum(s.deadline_missed for s in self.stats)),
-            "final_thresholds": self.stats[-1].thresholds,
-        }
+        # computed from self.stats (not engine.summary()) so old reset
+        # patterns (`server.stats = []`) window the aggregate as before,
+        # and without the post-SREngine "backend" key
+        return summarize_stats(self.stats)

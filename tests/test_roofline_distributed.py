@@ -108,7 +108,10 @@ def test_analytic_flops_cross_check_unrolled():
             return (x @ params['lm_head']).astype(jnp.float32)
 
         c = jax.jit(fwd_unrolled).lower(p, toks).compile()
-        flops_xla = c.cost_analysis()['flops']
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax: one dict per partition
+            ca = ca[0]
+        flops_xla = ca['flops']
         from repro.launch.costmodel import cell_cost
         from repro.configs.base import ShapeSpec
         cc = cell_cost(cfg, ShapeSpec('t', S, B, 'prefill'), 1)
