@@ -9,6 +9,25 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== pallas-backend frame smoke (interpret fallback on CPU) =="
+python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+from repro.api import SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+
+frame = degrade(jnp.asarray(random_image(0, 128, 128)), 2)
+ref = SREngine.from_config(ESSRConfig(scale=2), seed=1)
+pal = SREngine.from_config(ESSRConfig(scale=2), seed=1, backend="pallas")
+r, p = ref.upscale(frame), pal.upscale(frame)
+assert p.image.shape == (128, 128, 3)
+# on CPU the auto interpret policy must fall back and say so
+assert p.backend == "pallas-interpret", p.backend
+np.testing.assert_allclose(np.asarray(r.image), np.asarray(p.image), atol=1e-5)
+print("pallas smoke OK:", p.backend, p.counts)
+PY
+
 echo "== SREngine 2-frame stream smoke =="
 python - <<'PY'
 import jax.numpy as jnp

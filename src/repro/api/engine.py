@@ -6,7 +6,11 @@ One engine owns:
   * ``plan``    — an `ExecutionPlan` (patch geometry, thresholds, bucket
                   schedule, subnet policy), frozen at construction,
   * ``backend`` — "ref" (pure-JAX jit) or "pallas" (fused kernel groups),
-                  chosen ONCE instead of per call.
+                  chosen ONCE instead of per call. For "pallas",
+                  ``plan.interpret`` picks compiled vs interpreter dispatch
+                  (None = auto: compiled on TPU/GPU, interpreter on CPU);
+                  what actually ran is surfaced as FrameResult.backend
+                  ("pallas" vs "pallas-interpret").
 
 and exposes the paper's modes as methods returning one `FrameResult` shape:
 
@@ -24,9 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 import glob
+import json
 import os
 import re
 import time
+import warnings
 from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 import numpy as np
@@ -36,9 +42,9 @@ from repro.api.plan import ExecutionPlan
 from repro.api.result import FrameResult, summarize_stats
 from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
 from repro.core.edge_score import edge_score
-from repro.core.patching import extract_patches
 from repro.core.pipeline import (edge_selective_sr, resolve_backend,
                                  sr_all_patches_result, sr_whole)
+from repro.kernels.dispatch import resolve_interpret
 from repro.models.essr import ESSRConfig, init_essr
 
 #: Default location of the cached briefly-trained benchmark supernets
@@ -65,6 +71,19 @@ class SREngine:
             switching if switching is not None
             else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
         self.stats: List[FrameResult] = []
+
+    def _backend_label(self, plan: ExecutionPlan) -> str:
+        """What actually executes, surfaced in FrameResult.backend: "pallas"
+        only when the kernels compile (TPU/GPU or interpret=False); the CPU
+        interpreter fallback is labeled "pallas-interpret" so consumers never
+        mistake the correctness path for the fast one."""
+        if self.backend == "pallas" and resolve_interpret(plan.interpret):
+            return "pallas-interpret"
+        return self.backend
+
+    @property
+    def backend_label(self) -> str:
+        return self._backend_label(self.plan)
 
     # -- constructors --------------------------------------------------------
 
@@ -102,11 +121,29 @@ class SREngine:
         cfg = cfg if cfg is not None else ESSRConfig(scale=scale)
         params = init_essr(jax.random.PRNGKey(0), cfg)
         if ckpt_dir:
-            restored, _ = CheckpointManager(ckpt_dir).restore(
-                {"params": params, "ema": params})
-            params = restored[prefer]
+            cm = CheckpointManager(ckpt_dir)
+            # peek at the stored tree so a checkpoint written without an
+            # "ema" tree is detected instead of silently mis-restored
+            template = {"params": params, "ema": params}
+            try:
+                top = set(json.loads(cm.read_manifest()["tree_template"]))
+            except Exception:
+                top = None                       # legacy/unreadable manifest
+            if top is not None and top and top <= {"params", "ema"}:
+                template = {k: params for k in top}
+            restored, _ = cm.restore(template)
+            use = prefer
+            if use not in restored:
+                # fall back to whatever tree the checkpoint does hold
+                # ("params" when present, else e.g. an ema-only checkpoint)
+                use = ("params" if "params" in restored
+                       else next(iter(sorted(restored))))
+                warnings.warn(
+                    f"checkpoint {ckpt_dir} has no {prefer!r} tree "
+                    f"(found {sorted(restored)}); serving {use!r} instead")
+            params = restored[use]
             if verbose:
-                print(f"(restored {prefer!r} weights from {ckpt_dir})")
+                print(f"(restored {use!r} weights from {ckpt_dir})")
         elif bench_cache:
             pattern = os.path.join(bench_cache, f"essr_x{cfg.scale}_sfb{cfg.n_sfb}_*")
 
@@ -116,15 +153,22 @@ class SREngine:
                 m = re.match(r"(\d+)", d.rsplit("_", 1)[-1])
                 return int(m.group(1)) if m else -1
 
-            for cand in sorted(glob.glob(pattern), key=_steps, reverse=True):
+            cands = sorted(glob.glob(pattern), key=_steps, reverse=True)
+            restored_ok = False
+            for cand in cands:
                 try:
                     restored, _ = CheckpointManager(cand).restore({"params": params})
                     params = restored["params"]
+                    restored_ok = True
                     if verbose:
                         print(f"(using trained weights from {cand})")
                     break
-                except Exception:
-                    continue
+                except Exception as e:
+                    warnings.warn(f"bench-cache restore failed for {cand}: "
+                                  f"{e!r}; trying next candidate")
+            if cands and not restored_ok:
+                warnings.warn(f"no bench-cache candidate under {bench_cache} "
+                              f"restored cleanly; serving fresh random init")
         return cls(params, cfg, plan=plan, backend=backend,
                    switching=switching, deadline_s=deadline_s)
 
@@ -168,6 +212,9 @@ class SREngine:
             return FrameResult(image=img, mode=mode, backend="ref",
                                latency_s=time.perf_counter() - t0)
 
+        # cached gather/scatter maps for this frame shape (zero host setup
+        # after the first frame of a given geometry)
+        geom = p.geometry(frame.shape[0], frame.shape[1], self.cfg.scale)
         scored = False
         routed_by_thresholds = False
         result_mode = mode
@@ -177,7 +224,8 @@ class SREngine:
                                  f"got {width}")
             res = sr_all_patches_result(self.params, frame, self.cfg, width,
                                         patch=p.patch, overlap=p.overlap,
-                                        buckets=p.buckets, backend=self.backend)
+                                        buckets=p.buckets, backend=self.backend,
+                                        interpret=p.interpret, geometry=geom)
         elif ids_override is None and p.subnet_policy != "threshold":
             # forced policies ignore edge scores — reuse the no-scoring path;
             # plan.decide is the single policy-name -> subnet-id mapping.
@@ -187,18 +235,22 @@ class SREngine:
             forced = widths[int(p.decide(np.zeros(1))[0])]
             res = sr_all_patches_result(self.params, frame, self.cfg, forced,
                                         patch=p.patch, overlap=p.overlap,
-                                        buckets=p.buckets, backend=self.backend)
+                                        buckets=p.buckets, backend=self.backend,
+                                        interpret=p.interpret, geometry=geom)
         else:
-            scored = True
+            # an explicit ids_override skips the edge unit entirely, so there
+            # are no scores to report for that path
+            scored = ids_override is None
             routed_by_thresholds = ids_override is None
             res = edge_selective_sr(self.params, frame, self.cfg,
                                     t1=p.t1, t2=p.t2,
                                     patch=p.patch, overlap=p.overlap,
                                     ids_override=ids_override,
-                                    buckets=p.buckets, backend=self.backend)
+                                    buckets=p.buckets, backend=self.backend,
+                                    interpret=p.interpret, geometry=geom)
         res.image.block_until_ready()
         return FrameResult(image=res.image, mode=result_mode,
-                           backend=self.backend, ids=res.ids,
+                           backend=self._backend_label(p), ids=res.ids,
                            scores=res.scores if scored else None,
                            counts=res.counts, mac_saving=res.mac_saving,
                            latency_s=time.perf_counter() - t0,
@@ -223,13 +275,16 @@ class SREngine:
                 f"subnet_policy {self.plan.subnet_policy!r}; use upscale() "
                 f"for forced routing")
         t0 = time.perf_counter()
-        patches, pos = extract_patches(frame, self.plan.patch, self.plan.overlap)
+        geom = self.plan.geometry(frame.shape[0], frame.shape[1],
+                                  self.cfg.scale)
+        patches, pos = geom.extract(frame), geom.pos
         scores = np.asarray(edge_score(patches))
         ids = self.switcher.assign(scores)
         res = edge_selective_sr(self.params, frame, self.cfg,
                                 patch=self.plan.patch, overlap=self.plan.overlap,
                                 ids_override=ids, buckets=self.plan.buckets,
                                 backend=self.backend,
+                                interpret=self.plan.interpret, geometry=geom,
                                 precomputed=(patches, pos, scores))
         res.image.block_until_ready()
         dt = time.perf_counter() - t0
@@ -237,7 +292,7 @@ class SREngine:
         if missed:
             self.switcher.demote_for_straggler(severity=1.0)
         out = FrameResult(image=res.image, mode="edge_select",
-                          backend=self.backend, ids=ids, scores=scores,
+                          backend=self.backend_label, ids=ids, scores=scores,
                           counts=res.counts, mac_saving=res.mac_saving,
                           latency_s=dt, thresholds=self.switcher.thresholds,
                           deadline_missed=missed)
@@ -258,5 +313,5 @@ class SREngine:
         """Table-XI-style aggregate over all streamed frames."""
         s = summarize_stats(self.stats)
         if s:
-            s["backend"] = self.backend
+            s["backend"] = self.backend_label
         return s

@@ -2,19 +2,25 @@
 
 Consolidates every knob that used to travel as loose keyword arguments
 through `edge_selective_sr` / `FrameServer` / the benchmark helpers:
-patch geometry, edge thresholds, the jit bucket schedule, and the subnet
-policy. One plan == one compilation/routing regime; `SREngine` holds
-exactly one and every call reuses it (override per call with
-``plan.replace(...)`` only when a benchmark sweeps a knob).
+patch geometry, edge thresholds, the jit bucket schedule, the subnet
+policy, and the Pallas interpret policy. One plan == one compilation/routing
+regime; `SREngine` holds exactly one and every call reuses it (override per
+call with ``plan.replace(...)`` only when a benchmark sweeps a knob).
+
+``plan.geometry(h, w, scale)`` resolves the cached `PatchGeometry` (gather/
+scatter index maps + overlap counts) for a frame shape under this plan's
+patch/overlap — computed once per geometry, so repeated frames of a stream
+pay zero host-side setup.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core import subnet_policy as sp
+from repro.core.patching import PatchGeometry, get_geometry
 from repro.core.pipeline import DEFAULT_BUCKETS
 
 #: Subnet-policy names accepted by :class:`ExecutionPlan`.
@@ -32,6 +38,10 @@ class ExecutionPlan:
     t2: float = sp.DEFAULT_T2
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     subnet_policy: str = "threshold"
+    #: Pallas dispatch: None = auto (compiled on TPU/GPU, interpreter as the
+    #: CPU-correctness fallback); True/False force it. Only consulted by the
+    #: "pallas" backend.
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         # keep the frozen/hashable contract even when callers pass a list
@@ -47,6 +57,9 @@ class ExecutionPlan:
                 or list(self.buckets) != sorted(set(self.buckets))):
             raise ValueError(f"buckets must be ascending positive ints, "
                              f"got {self.buckets}")
+        if self.interpret not in (None, True, False):
+            raise ValueError(f"interpret must be None/True/False, "
+                             f"got {self.interpret!r}")
 
     def replace(self, **kw) -> "ExecutionPlan":
         """Functional update (plans are frozen)."""
@@ -64,6 +77,15 @@ class ExecutionPlan:
         fixed = {"all_bilinear": sp.BILINEAR, "all_c27": sp.C27,
                  "all_c54": sp.C54}[self.subnet_policy]
         return np.full(scores.shape, fixed, dtype=np.int64)
+
+    def geometry(self, h: int, w: int, scale: int) -> PatchGeometry:
+        """Cached gather/scatter maps for an (h, w) frame under this plan.
+
+        Backed by the process-wide LRU in `repro.core.patching`; the first
+        frame of a given shape pays the host-side index build, every later
+        frame of the stream reuses it."""
+        return get_geometry(int(h), int(w), self.patch, self.overlap,
+                            int(scale))
 
     @property
     def thresholds(self) -> Tuple[float, float]:

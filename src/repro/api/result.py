@@ -21,7 +21,9 @@ class FrameResult:
     # (holding every streamed SR frame would grow without bound)
     image: Optional[jax.Array]                # (H*s, W*s, 3)
     mode: str                                 # "edge_select"|"all_patches"|"whole"
-    backend: str                              # "ref" | "pallas"
+    backend: str                              # "ref" | "pallas" (compiled)
+                                              # | "pallas-interpret" (CPU
+                                              # interpreter fallback)
     ids: Optional[np.ndarray] = None          # (N,) subnet id per patch
     scores: Optional[np.ndarray] = None       # (N,) edge score per patch
     counts: Tuple[int, int, int] = (0, 0, 0)  # (bilinear, C27, C54) patches

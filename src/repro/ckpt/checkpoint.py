@@ -114,6 +114,22 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict:
+        """Parsed manifest of ``step`` (newest by default) — tree structure,
+        per-leaf dtype/shape, meta — WITHOUT loading any arrays. Lets callers
+        inspect what a checkpoint holds (e.g. whether an "ema" tree exists)
+        before committing to a restore template."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.bin"), "rb") as f:
+            blob = f.read()
+        if _HAVE_MSGPACK:
+            return msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob))
+        return json.loads(blob.decode())            # pragma: no cover
+
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
         """Restore into the structure of ``template``. If ``shardings`` (a
@@ -124,12 +140,7 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(d, "manifest.bin"), "rb") as f:
-            blob = f.read()
-        if _HAVE_MSGPACK:
-            manifest = msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob))
-        else:                                       # pragma: no cover
-            manifest = json.loads(blob.decode())
+        manifest = self.read_manifest(step)
         paths, leaves, treedef = _tree_paths(template)
         assert len(paths) == len(manifest["leaves"]), \
             f"checkpoint has {len(manifest['leaves'])} leaves, template {len(paths)}"

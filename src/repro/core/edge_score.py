@@ -29,13 +29,18 @@ def laplacian_response(luma: jax.Array) -> jax.Array:
     return jnp.clip(jnp.abs(y), 0.0, 255.0)
 
 
+@jax.jit
 def edge_score(patches: jax.Array) -> jax.Array:
-    """(N,h,w,3) RGB in [0,1]  ->  (N,) edge scores in [0,255]."""
+    """(N,h,w,3) RGB in [0,1]  ->  (N,) edge scores in [0,255].
+
+    jit'd: the serving path scores every patch batch of a stream, and the
+    shapes recur per geometry."""
     luma = rgb_to_luma(patches)
     resp = laplacian_response(luma)
     return resp.mean(axis=(1, 2))
 
 
+@jax.jit
 def edge_score_luma(luma: jax.Array) -> jax.Array:
     """(N,h,w) luma in [0,255] -> (N,) edge scores."""
     return laplacian_response(luma).mean(axis=(1, 2))

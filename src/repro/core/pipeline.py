@@ -4,10 +4,19 @@ frame -> slim-overlap patches -> edge scores -> subnet decision ->
 per-subnet batched forward -> thick-overlap overlap+average fusion.
 
 Two execution styles:
-  * ``edge_selective_sr``: host-grouped, jit-per-subnet — the serving path.
-    Per-subnet batches are padded to bucketed sizes so jit recompilation is
-    bounded (the shape-static analog of the GLNPU's fixed PE array).
+  * ``edge_selective_sr``: device-resident serving path. Patch extraction is
+    one cached-index gather, fusion one scatter-add (`PatchGeometry`, cached
+    per frame shape); per-subnet batches are padded to bucketed sizes so jit
+    recompilation is bounded (the shape-static analog of the GLNPU's fixed PE
+    array). Routing itself stays host-side: which subnet a patch takes is
+    data-dependent, and the host grouping is what keeps each subnet batch
+    shape-static.
   * ``sr_whole`` / ``sr_all_patches``: non-dynamic references for ablations.
+
+``backend`` picks the per-subnet forward: "ref" (pure-JAX jit) or "pallas"
+(fused kernel groups); ``interpret`` (None/True/False) selects compiled vs
+interpreter Pallas — None auto-compiles on TPU/GPU and falls back to the
+interpreter on CPU (see repro.kernels.dispatch).
 """
 from __future__ import annotations
 
@@ -21,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.core import subnet_policy as sp
 from repro.core.edge_score import edge_score
-from repro.core.patching import extract_patches, fuse_patches_average
+from repro.core.patching import (PatchGeometry, extract_patches_loop,
+                                 fuse_patches_average_loop, get_geometry)
 from repro.models.essr import ESSRConfig, essr_forward
 
 
@@ -36,11 +46,18 @@ def _bucket(n: int, buckets=DEFAULT_BUCKETS) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "width"))
-def _forward_width(params, patches, cfg: ESSRConfig, width: int):
+def _forward_width_jit(params, patches, cfg: ESSRConfig, width: int):
     return essr_forward(params, patches, cfg, width=width)
 
 
-def _forward_width_pallas(params, patches, cfg: ESSRConfig, width: int):
+def _forward_width(params, patches, cfg: ESSRConfig, width: int,
+                   interpret: Optional[bool] = None):
+    # pure-JAX path has no interpret knob; accepted for a uniform signature
+    return _forward_width_jit(params, patches, cfg, width)
+
+
+def _forward_width_pallas(params, patches, cfg: ESSRConfig, width: int,
+                          interpret: Optional[bool] = None):
     """Fused-kernel backend: same contract as ``_forward_width``.
 
     Bilinear patches never reach the conv kernels (handled by the router on
@@ -49,7 +66,8 @@ def _forward_width_pallas(params, patches, cfg: ESSRConfig, width: int):
     from repro.models.layers import bilinear_resize
     if width == 0:
         return bilinear_resize(patches, cfg.scale)
-    return essr_forward_kernels(params, patches, cfg, width=width)
+    return essr_forward_kernels(params, patches, cfg, width=width,
+                                interpret=interpret)
 
 
 BACKENDS = {"ref": _forward_width, "pallas": _forward_width_pallas}
@@ -77,37 +95,73 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
                       ids_override: Optional[np.ndarray] = None,
                       buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
                       backend: str = "ref",
+                      interpret: Optional[bool] = None,
+                      geometry: Optional[PatchGeometry] = None,
                       precomputed: Optional[Tuple[jax.Array, np.ndarray,
-                                                  np.ndarray]] = None) -> SRResult:
+                                                  np.ndarray]] = None,
+                      use_loop_reference: bool = False) -> SRResult:
     """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image.
+
+    ``geometry``: optional pre-fetched `PatchGeometry` (SREngine passes its
+    plan's); resolved from the cache otherwise — either way the per-frame
+    host work is index-free.
 
     ``precomputed``: optional (patches, pos, scores) from a caller that
     already extracted/scored this frame (the streaming path scores patches
     for the adaptive switcher) — avoids doing that work twice per frame.
+
+    ``use_loop_reference``: run the seed per-patch extract/fuse loops instead
+    of the vectorized gather/scatter — the equivalence oracle for tests and
+    the "before" side of benchmarks/table11_throughput.py. Never the serving
+    path.
     """
     forward = resolve_backend(backend)
+    s = cfg.scale
+    h, w = int(frame.shape[0]), int(frame.shape[1])
+    g = geometry if geometry is not None else get_geometry(h, w, patch,
+                                                           overlap, s)
     if precomputed is not None:
         patches, pos, scores = precomputed
         scores = np.asarray(scores)
     else:
-        patches, pos = extract_patches(frame, patch=patch, overlap=overlap)
-        scores = np.asarray(edge_score(patches))
+        if use_loop_reference:
+            patches, pos = extract_patches_loop(frame, patch, overlap)
+        else:
+            patches, pos = g.extract(frame), g.pos
+        if ids_override is None:
+            scores = np.asarray(edge_score(patches))
+        else:
+            # forced routing never consults the edge unit (as on the ASIC);
+            # scores are reported as zeros rather than computed and discarded
+            scores = np.zeros(len(pos), np.float32)
     ids = ids_override if ids_override is not None else np.asarray(sp.decide(scores, t1, t2))
 
-    s = cfg.scale
-    out_patches = jnp.zeros((patches.shape[0], patch * s, patch * s, 3), patches.dtype)
+    out_patches = jnp.zeros((patches.shape[0], patch * s, patch * s, 3),
+                            patches.dtype)
     widths = cfg.subnet_widths()
     for k, width in enumerate(widths):
         idx = np.flatnonzero(ids == k)
         if idx.size == 0:
             continue
+        if idx.size == len(ids):
+            # one subnet took the whole frame: no gather/scatter, and no
+            # bucket padding (the full-batch shape recurs per geometry, so
+            # compilation stays bounded without it)
+            out_patches = forward(params, patches, cfg, width,
+                                  interpret=interpret)
+            continue
         cap = _bucket(idx.size, buckets)
-        pad = np.concatenate([idx, np.zeros(cap - idx.size, dtype=idx.dtype)])
-        sr = forward(params, patches[pad], cfg, width)[: idx.size]
-        out_patches = out_patches.at[idx].set(sr)
+        # pad with the bucket's own last index (not patch 0): the duplicate
+        # work is cache-friendly and never re-runs another subnet's patch
+        pad = np.concatenate([idx, np.full(cap - idx.size, idx[-1], idx.dtype)])
+        sr = forward(params, jnp.take(patches, jnp.asarray(pad), axis=0),
+                     cfg, width, interpret=interpret)[: idx.size]
+        out_patches = out_patches.at[jnp.asarray(idx)].set(sr)
 
-    h, w = int(frame.shape[0]) * s, int(frame.shape[1]) * s
-    img = fuse_patches_average(out_patches, pos, s, (h, w))
+    if use_loop_reference:
+        img = fuse_patches_average_loop(out_patches, pos, s, (h * s, w * s))
+    else:
+        img = g.fuse_average(out_patches)
     counts = sp.subnet_counts(ids)
     saving = sp.SubnetMacs.make(cfg, patch).saving_vs_c54(counts)
     return SRResult(image=img, ids=ids, scores=scores, counts=counts, mac_saving=saving)
@@ -116,7 +170,9 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
 def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
                           patch: int = 32, overlap: int = 2,
                           buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
-                          backend: str = "ref") -> SRResult:
+                          backend: str = "ref",
+                          interpret: Optional[bool] = None,
+                          geometry: Optional[PatchGeometry] = None) -> SRResult:
     """Every patch through one subnet (the non-edge-selective reference).
 
     The single implementation of forced routing — the edge-score pass is
@@ -124,10 +180,13 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
     widths = cfg.subnet_widths()
     if width not in widths:
         raise ValueError(f"width {width} not one of the subnet widths {widths}")
-    patches, pos = extract_patches(frame, patch, overlap)
+    g = geometry if geometry is not None else get_geometry(
+        int(frame.shape[0]), int(frame.shape[1]), patch, overlap, cfg.scale)
+    patches, pos = g.extract(frame), g.pos
     ids = np.full((len(pos),), widths.index(width), dtype=np.int64)
     return edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
                              ids_override=ids, buckets=buckets, backend=backend,
+                             interpret=interpret, geometry=g,
                              precomputed=(patches, pos,
                                           np.zeros(len(pos), np.float32)))
 

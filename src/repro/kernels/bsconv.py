@@ -16,10 +16,13 @@ see EXPERIMENTS.md §Roofline/ESSR).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import pad_batch, resolve_interpret
 
 
 def _dw3x3(y: jax.Array, dw: jax.Array) -> jax.Array:
@@ -52,19 +55,22 @@ def bsconv_kernel(x_ref, pw_ref, pwb_ref, dw_ref, dwb_ref, o_ref, *, relu: bool)
 
 @functools.partial(jax.jit, static_argnames=("relu", "block_patches", "interpret"))
 def bsconv_fused(x, pw, pw_b, dw, dw_b, *, relu: bool = False,
-                 block_patches: int = 4, interpret: bool = True):
+                 block_patches: int = 4, interpret: Optional[bool] = None):
     """x: (N,H,W,Cin); pw: (Cin,Cout); dw: (3,3,Cout); biases (Cout,).
 
     ``block_patches``: patches per grid step. The C27 subnet doubles it at the
     same VMEM budget (ops.py) — the "configurable group of layer mapping".
+    ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU).
+    Batches not divisible by the block are zero-padded and re-sliced.
     """
-    n, h, w, cin = x.shape
+    interpret = resolve_interpret(interpret)
+    bblk = min(block_patches, x.shape[0])
+    x, n = pad_batch(x, bblk)
+    _, h, w, cin = x.shape
     cout = pw.shape[-1]
-    bblk = min(block_patches, n)
-    assert n % bblk == 0, f"patch count {n} not divisible by block {bblk}"
     pwb2 = pw_b.reshape(1, cout)
     dwb2 = dw_b.reshape(1, cout)
-    grid = (n // bblk,)
+    grid = (x.shape[0] // bblk,)
     return pl.pallas_call(
         functools.partial(bsconv_kernel, relu=relu),
         grid=grid,
@@ -76,6 +82,6 @@ def bsconv_fused(x, pw, pw_b, dw, dw_b, *, relu: bool = False,
             pl.BlockSpec((1, cout), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bblk, h, w, cout), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, h, w, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], h, w, cout), x.dtype),
         interpret=interpret,
-    )(x, pw, pwb2, dw, dwb2)
+    )(x, pw, pwb2, dw, dwb2)[:n]

@@ -1,0 +1,49 @@
+"""Interpret-vs-compiled policy for the Pallas kernel stack.
+
+Every fused kernel takes ``interpret: Optional[bool]``:
+
+  * ``None``  (default) — auto: compile the Pallas kernel when an accelerator
+    backend (TPU/GPU) is present; fall back to the interpreter on CPU, where
+    Mosaic cannot compile and interpret mode is the correctness path.
+  * ``True`` / ``False`` — explicit override (tests force ``True``; a TPU
+    deployment that has validated the kernels may force ``False``).
+
+Resolution happens at trace time (``interpret`` is a static argument), so the
+policy costs nothing per call. ``ExecutionPlan.interpret`` carries the same
+tri-state through `SREngine`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: Backends whose Pallas lowering is compiled (Mosaic / Triton).
+COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def default_interpret() -> bool:
+    """True when only the interpreter can run Pallas (CPU hosts)."""
+    return jax.default_backend() not in COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Tri-state -> concrete bool (None = auto-select, see module docstring)."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def pad_batch(x: jax.Array, block: int):
+    """Pad axis 0 of ``x`` up to a multiple of ``block`` (zeros).
+
+    Returns ``(padded, n)`` where ``n`` is the original length; callers slice
+    the kernel output back to ``n``. Replaces the seed's hard
+    ``assert n % block == 0`` (a trap for direct callers) and the silent
+    ``block -= 1`` walk-down that destroyed throughput for prime batch sizes.
+    """
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, n

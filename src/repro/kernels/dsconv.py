@@ -8,12 +8,14 @@ back to HBM once.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bsconv import _dw3x3
+from repro.kernels.dispatch import pad_batch, resolve_interpret
 
 
 def dsconv_kernel(x_ref, dw_ref, dwb_ref, pw_ref, pwb_ref, o_ref, *, relu: bool):
@@ -30,15 +32,19 @@ def dsconv_kernel(x_ref, dw_ref, dwb_ref, pw_ref, pwb_ref, o_ref, *, relu: bool)
 
 @functools.partial(jax.jit, static_argnames=("relu", "block_patches", "interpret"))
 def dsconv_fused(x, dw, dw_b, pw, pw_b, *, relu: bool = False,
-                 block_patches: int = 4, interpret: bool = True):
-    """x: (N,H,W,Cin); dw: (3,3,Cin); pw: (Cin,Cout)."""
-    n, h, w, cin = x.shape
+                 block_patches: int = 4, interpret: Optional[bool] = None):
+    """x: (N,H,W,Cin); dw: (3,3,Cin); pw: (Cin,Cout).
+
+    ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU);
+    non-divisible batches are zero-padded and re-sliced."""
+    interpret = resolve_interpret(interpret)
+    bblk = min(block_patches, x.shape[0])
+    x, n = pad_batch(x, bblk)
+    _, h, w, cin = x.shape
     cout = pw.shape[-1]
-    bblk = min(block_patches, n)
-    assert n % bblk == 0
     return pl.pallas_call(
         functools.partial(dsconv_kernel, relu=relu),
-        grid=(n // bblk,),
+        grid=(x.shape[0] // bblk,),
         in_specs=[
             pl.BlockSpec((bblk, h, w, cin), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((3, 3, cin), lambda i: (0, 0, 0)),
@@ -47,6 +53,6 @@ def dsconv_fused(x, dw, dw_b, pw, pw_b, *, relu: bool = False,
             pl.BlockSpec((1, cout), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bblk, h, w, cout), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, h, w, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], h, w, cout), x.dtype),
         interpret=interpret,
-    )(x, dw, dw_b.reshape(1, cin), pw, pw_b.reshape(1, cout))
+    )(x, dw, dw_b.reshape(1, cin), pw, pw_b.reshape(1, cout))[:n]

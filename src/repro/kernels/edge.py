@@ -8,10 +8,13 @@ second pass over HBM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import pad_batch, resolve_interpret
 
 
 def edge_kernel(x_ref, o_ref):
@@ -27,17 +30,22 @@ def edge_kernel(x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_patches", "interpret"))
-def edge_score_fused(x, *, block_patches: int = 64, interpret: bool = True):
-    """x: (N,h,w,3) -> (N,) edge scores."""
-    n, h, w, c = x.shape
-    bblk = min(block_patches, n)
-    assert n % bblk == 0
+def edge_score_fused(x, *, block_patches: int = 64,
+                     interpret: Optional[bool] = None):
+    """x: (N,h,w,3) -> (N,) edge scores.
+
+    ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU);
+    non-divisible batches are zero-padded and re-sliced."""
+    interpret = resolve_interpret(interpret)
+    bblk = min(block_patches, x.shape[0])
+    x, n = pad_batch(x, bblk)
+    _, h, w, c = x.shape
     out = pl.pallas_call(
         edge_kernel,
-        grid=(n // bblk,),
+        grid=(x.shape[0] // bblk,),
         in_specs=[pl.BlockSpec((bblk, h, w, c), lambda i: (i, 0, 0, 0))],
         out_specs=pl.BlockSpec((bblk, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32),
         interpret=interpret,
     )(x)
-    return out[:, 0]
+    return out[:n, 0]

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bsconv import bsconv_fused
+from repro.kernels.dispatch import default_interpret, pad_batch, resolve_interpret
 from repro.kernels.dsconv import dsconv_fused
 from repro.kernels.edge import edge_score_fused
 from repro.kernels.sfb import sfb_fused
@@ -42,19 +43,24 @@ def default_block_patches(width: int, channels: int = 54, base: int = 4) -> int:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "width", "block_patches", "interpret"))
 def essr_forward_kernels(params, x, cfg: ESSRConfig, width: Optional[int] = None,
-                         block_patches: Optional[int] = None, interpret: bool = True):
+                         block_patches: Optional[int] = None,
+                         interpret: Optional[bool] = None):
     """Patch-batch ESSR forward entirely through the fused Pallas groups.
 
     x: (N,p,p,3). width in {27,54}; bilinear patches never reach the kernels
-    (the router handles them, as on the ASIC)."""
+    (the router handles them, as on the ASIC).
+
+    The batch is zero-padded ONCE to a multiple of ``block_patches`` and
+    sliced after the chain, so prime batch sizes keep the full grid block
+    (the seed walked ``block_patches`` down to 1, a silent throughput cliff).
+    ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU)."""
     w = width if width is not None else cfg.channels
     assert w > 0, "bilinear subnet does not use the conv kernels"
     if w != cfg.channels:
         params = slice_width(params, w)
     bp = block_patches if block_patches is not None else default_block_patches(w, cfg.channels)
     bp = min(bp, x.shape[0])
-    while x.shape[0] % bp:
-        bp -= 1
+    x, n = pad_batch(x, bp)
 
     f = bsconv_fused(x, params["first"]["pw"][0, 0], params["first"]["pw_b"],
                      params["first"]["dw"][:, :, 0, :], params["first"]["dw_b"],
@@ -64,8 +70,9 @@ def essr_forward_kernels(params, x, cfg: ESSRConfig, width: Optional[int] = None
     up = dsconv_fused(f, params["recon"]["dw"][:, :, 0, :], params["recon"]["dw_b"],
                       params["recon"]["pw"][0, 0], params["recon"]["pw_b"],
                       relu=False, block_patches=bp, interpret=interpret)
-    return pixel_shuffle(up, cfg.scale)
+    return pixel_shuffle(up, cfg.scale)[:n]
 
 
 __all__ = ["bsconv_fused", "dsconv_fused", "sfb_fused", "edge_score_fused",
-           "essr_forward_kernels", "default_block_patches"]
+           "essr_forward_kernels", "default_block_patches",
+           "default_interpret", "resolve_interpret"]

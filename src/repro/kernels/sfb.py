@@ -9,12 +9,14 @@ exact HBM-byte saving is measured in benchmarks/table_fusion.py).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bsconv import _dw3x3
+from repro.kernels.dispatch import pad_batch, resolve_interpret
 
 
 def sfb_kernel(x_ref, b1pw_ref, b1pwb_ref, b1dw_ref, b1dwb_ref,
@@ -37,18 +39,22 @@ def sfb_kernel(x_ref, b1pw_ref, b1pwb_ref, b1dw_ref, b1dwb_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_patches", "interpret"))
-def sfb_fused(x, p, *, block_patches: int = 4, interpret: bool = True):
-    """x: (N,H,W,C); p: flat dict (see kernels/ref.py sfb_ref)."""
-    n, h, w, c = x.shape
-    bblk = min(block_patches, n)
-    assert n % bblk == 0
+def sfb_fused(x, p, *, block_patches: int = 4, interpret: Optional[bool] = None):
+    """x: (N,H,W,C); p: flat dict (see kernels/ref.py sfb_ref).
+
+    ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU);
+    non-divisible batches are zero-padded and re-sliced."""
+    interpret = resolve_interpret(interpret)
+    bblk = min(block_patches, x.shape[0])
+    x, n = pad_batch(x, bblk)
+    _, h, w, c = x.shape
     r2 = lambda v: v.reshape(1, -1)
     stationary_w = lambda: pl.BlockSpec((c, c), lambda i: (0, 0))
     stationary_b = lambda: pl.BlockSpec((1, c), lambda i: (0, 0))
     stationary_d = lambda: pl.BlockSpec((3, 3, c), lambda i: (0, 0, 0))
     return pl.pallas_call(
         sfb_kernel,
-        grid=(n // bblk,),
+        grid=(x.shape[0] // bblk,),
         in_specs=[
             pl.BlockSpec((bblk, h, w, c), lambda i: (i, 0, 0, 0)),
             stationary_w(), stationary_b(), stationary_d(), stationary_b(),
@@ -56,8 +62,8 @@ def sfb_fused(x, p, *, block_patches: int = 4, interpret: bool = True):
             stationary_w(), stationary_b(),
         ],
         out_specs=pl.BlockSpec((bblk, h, w, c), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, h, w, c), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], h, w, c), x.dtype),
         interpret=interpret,
     )(x, p["b1_pw"], r2(p["b1_pwb"]), p["b1_dw"], r2(p["b1_dwb"]),
       p["b2_pw"], r2(p["b2_pwb"]), p["b2_dw"], r2(p["b2_dwb"]),
-      p["fuse"], r2(p["fuse_b"]))
+      p["fuse"], r2(p["fuse_b"]))[:n]

@@ -77,6 +77,36 @@ def test_whole_essr_through_kernels(width):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("n", [1, 5, 7])
+def test_prime_batch_pads_instead_of_shrinking(n):
+    """Batches not divisible by block_patches are padded and re-sliced —
+    no assert trap, no silent block_patches walk-down to 1."""
+    k = jax.random.PRNGKey(5)
+    cin, cout = 3, 18
+    x = jax.random.uniform(k, (n, 8, 8, cin))
+    pw = jax.random.normal(k, (cin, cout)) * 0.2
+    dw = jax.random.normal(k, (3, 3, cout)) * 0.2
+    pb, db = jnp.zeros((cout,)), jnp.zeros((cout,))
+    a = ops.bsconv_fused(x, pw, pb, dw, db, block_patches=4)
+    np.testing.assert_allclose(np.asarray(a),
+                               np.asarray(ref.bsconv_ref(x, pw, pb, dw, db)),
+                               rtol=1e-4, atol=1e-5)
+    s = ops.edge_score_fused(jax.random.uniform(k, (n, 8, 8, 3)),
+                             block_patches=4)
+    assert s.shape == (n,)
+
+
+@pytest.mark.parametrize("n", [5, 7])
+def test_whole_essr_kernels_prime_batch(n):
+    k = jax.random.PRNGKey(6)
+    p = init_essr(k, ESSR_X4)
+    x = jax.random.uniform(k, (n, 8, 8, 3))
+    a = ops.essr_forward_kernels(p, x, ESSR_X4, width=54, block_patches=4)
+    b = essr_forward(p, x, ESSR_X4, width=54)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_c27_doubles_block_patches():
     """The 'configurable group of layer mapping': C27 moves 2x the patches
     per grid step at the same VMEM budget."""
