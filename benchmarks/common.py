@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,7 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.data.synthetic import degrade, patch_batches, random_image
 from repro.models.essr import ESSRConfig, init_essr
 from repro.train import optimizer as O
-from repro.train.losses import psnr_y, ssim
+from repro.train.losses import psnr_y
 from repro.train.trainer import train_essr_supernet
 
 from repro.api.engine import DEFAULT_BENCH_CACHE as CACHE  # single source

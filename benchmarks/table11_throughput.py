@@ -3,12 +3,17 @@
     host-side per-patch extract/fuse loops vs the device-resident
     gather/scatter paths, written to BENCH_table11_throughput.json so the
     perf trajectory is tracked across PRs,
-(b) measured CPU frame throughput per subnet through `SREngine`, once per
+(b) a ``--shards`` sweep of the data-parallel patch stream (shard_map over
+    the 1-D patch mesh) on the same micro-config frame, recorded into the
+    same JSON — on CPU the virtual devices share cores so this measures
+    dispatch overhead + correctness, on real hardware it measures scaling,
+(c) measured CPU frame throughput per subnet through `SREngine`, once per
     backend ("ref" pure-JAX jit vs "pallas" fused kernel groups, interpret
     mode on CPU), exercising the full patch->route->batch->fuse pipeline, and
-(c) the TPU-side projection from the dry-run roofline (results/dryrun),
+(d) the TPU-side projection from the dry-run roofline (results/dryrun),
     i.e. the frames/s one v5e chip supports at the measured bytes/flops.
 Power/gate count are N/A on CPU and stated as such."""
+import argparse
 import json
 import os
 
@@ -19,6 +24,7 @@ import numpy as np
 from benchmarks.common import emit, get_trained_essr, timed
 from repro.api import SREngine
 from repro.core.pipeline import edge_selective_sr
+from repro.launch.mesh import make_patch_mesh
 from repro.models.essr import ESSRConfig, init_essr
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
@@ -66,7 +72,39 @@ def _measure_frame(params, cfg, frame, label: str) -> dict:
     }
 
 
-def bench_patch_pipeline(out_json: str = BENCH_JSON) -> dict:
+def _measure_shards(params, cfg, frame, shard_counts) -> dict:
+    """The ``--shards`` sweep: the same micro-config frame through the
+    data-parallel patch stream at each shard count. Counts beyond the
+    visible device count are recorded as skipped (never silently dropped);
+    every row is checked against the UNSHARDED pipeline (computed up front,
+    so a ``--shards 4,2`` sweep order cannot silently compare sharded vs
+    sharded)."""
+    ref_img = np.asarray(jax.block_until_ready(
+        edge_selective_sr(params, frame, cfg, backend="ref").image))
+    rows = {}
+    for s in shard_counts:
+        if s > jax.device_count():
+            rows[str(s)] = {"skipped": f"{jax.device_count()} devices visible"}
+            emit(f"table11_shard_sweep_{s}", 0.0,
+                 f"skipped;devices={jax.device_count()}")
+            continue
+        mesh = make_patch_mesh(s) if s > 1 else None
+        run = lambda: edge_selective_sr(params, frame, cfg, backend="ref",
+                                        mesh=mesh).image
+        img = jax.block_until_ready(run())       # warm jit + shard_map cache
+        allclose = bool(np.allclose(np.asarray(img), ref_img,
+                                    rtol=1e-5, atol=1e-5))
+        us = _best_of(run, reps=5)
+        emit(f"table11_shard_sweep_{s}", us,
+             f"fps={1e6 / us:.3f};allclose_vs_1shard={allclose}")
+        rows[str(s)] = {"us_per_frame": round(us, 1),
+                        "fps": round(1e6 / us, 3),
+                        "allclose_vs_1shard": allclose}
+    return rows
+
+
+def bench_patch_pipeline(out_json: str = BENCH_JSON,
+                         shard_counts=(1, 2, 4)) -> dict:
     """Host-loop removal, measured on one 480x270 -> x4 frame through the
     full edge-selective pipeline (threshold routing):
 
@@ -99,6 +137,12 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON) -> dict:
         # reports the conv-bound worst case alongside
         "speedup_x": rows["smooth_all_bilinear"]["speedup_x"],
         "frames": rows,
+        # the mixed-content frame routes to all three subnets, so the sweep
+        # exercises sharded dispatch of every bucket
+        "shard_sweep": _measure_shards(
+            params, cfg,
+            jnp.where((yy < 0.5)[..., None], smooth, noise), shard_counts),
+        "shard_sweep_devices": jax.device_count(),
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)
@@ -107,7 +151,23 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON) -> dict:
 
 
 def main():
-    bench_patch_pipeline()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma-separated shard counts for the sharded patch "
+                         "stream sweep (counts beyond the visible devices are "
+                         "recorded as skipped)")
+    ap.add_argument("--out-json", default=BENCH_JSON,
+                    help="where the patch-pipeline/shard-sweep record lands")
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="only the JSON-recorded pipeline + shard benches "
+                         "(skip the trained-supernet CPU table and the TPU "
+                         "projection; what scripts/bench_gate.py runs)")
+    args = ap.parse_args()
+    shard_counts = tuple(int(s) for s in args.shards.split(","))
+
+    bench_patch_pipeline(out_json=args.out_json, shard_counts=shard_counts)
+    if args.pipeline_only:
+        return
     hw, scale = 96, 4
     frame = jax.random.uniform(jax.random.PRNGKey(0), (hw, hw, 3))
     hr_pix = (hw * scale) ** 2
@@ -131,7 +191,6 @@ def main():
         d = json.load(open(f))
         r = d["roofline"]
         step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
-        hr_pixels = 2304 * 128 * 128          # one 8K frame's worth of patches
         fps_mesh = 1.0 / step_s if step_s > 0 else float("inf")
         emit("table11_tpu_projection", 0.0,
              f"dominant={r['dominant']};frame_step_s={step_s:.2e};"

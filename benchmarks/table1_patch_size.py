@@ -5,8 +5,6 @@ The SRAM columns are exact reconstructions of the paper's numbers
 patch x 54 x 1.25B + 200B control) — asserted against Table I. PSNR is
 measured on synthetic eval frames with the edge-selective pipeline.
 """
-import numpy as np
-
 from benchmarks.common import (emit, eval_frames, get_trained_essr,
                                mean_psnr_edge_selective, timed)
 

@@ -1,7 +1,5 @@
 """Paper Table II: #SFB ablation — exact parameter identities + short-train
 quality ordering on synthetic data."""
-import jax
-
 from benchmarks.common import (emit, eval_frames, get_trained_essr,
                                mean_psnr_edge_selective)
 from repro.models.essr import ESSRConfig, essr_param_count

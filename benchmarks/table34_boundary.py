@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import emit, eval_frames, get_trained_essr
 from repro.core.patching import extract_patches, fuse_patches_average, \
     fuse_patches_crop, overlap_mac_overhead
-from repro.core.pipeline import edge_selective_sr, sr_whole
+from repro.core.pipeline import sr_whole
 from repro.train.losses import psnr_y
 
 PAPER_T4 = {16: (243, 1.31), 12: (176, 1.22), 8: (114, 1.14),

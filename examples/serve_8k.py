@@ -7,7 +7,17 @@ via ``SREngine.from_checkpoint``): per-frame edge scores, resource-adaptive
 thresholds (the C54/sec ceiling demotes overflow patches to C27 — throughput
 guaranteed, quality floor kept), per-subnet batched execution,
 overlap+average fusion. Prints Table-XI-style summary. Accepts every
-``repro.launch.serve`` flag (--ckpt, --budget, --backend, --deadline-ms).
+``repro.launch.serve`` flag (--ckpt, --budget, --backend, --deadline-ms,
+--shards).
+
+Sharded streaming: ``--shards N`` splits each frame's routed patch buckets
+across up to N devices (one Algorithm-1 controller per raster-strip shard;
+on a missed frame deadline the shards carrying the most estimated MAC cost
+are demoted C54->C27 so aggregate FPS holds). Run with 4 virtual CPU
+devices to try it without hardware:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python examples/serve_8k.py --frames 4 --hw 96 --shards 4
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,119 @@
+"""Bench-regression gate over the table11 patch-pipeline micro-config.
+
+Re-runs the ref-backend micro benchmark (the same 480x270 -> x4 frames and
+``--shards`` sweep that produced the committed ``BENCH_table11_throughput.json``)
+and fails when the fresh numbers regress past a tolerance band:
+
+  * correctness is a hard gate — every ``allclose`` flag must hold, at zero
+    tolerance (a wrong-but-fast pipeline is a regression, not a win);
+  * ``speedup_x`` (vectorized vs seed loop, measured back-to-back on the SAME
+    machine) is the machine-portable throughput signal: it must stay within
+    ``--tol`` of the committed ratio, or the host-loop removal has rotted;
+  * absolute FPS is compared within the same band — wide by default because
+    CI runners are not the machine that committed the JSON; tighten with
+    ``--tol`` (or ``BENCH_GATE_TOL``) on a pinned perf box.
+
+The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
+every CI run leaves an inspectable perf record even when the gate passes.
+
+    PYTHONPATH=src:. python scripts/bench_gate.py [--tol 0.5] [--shards 1,2,4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [REPO, os.path.join(REPO, "src")]
+
+COMMITTED = os.path.join(REPO, "BENCH_table11_throughput.json")
+
+
+def compare(committed: dict, fresh: dict, tol: float) -> list:
+    """Return a list of human-readable failure strings (empty == gate holds)."""
+    fails = []
+
+    def band(name: str, got: float, want: float):
+        if got < want * (1.0 - tol):
+            fails.append(f"{name}: {got:.3f} < committed {want:.3f} "
+                         f"- {tol:.0%} band")
+
+    for key, want_row in committed.get("frames", {}).items():
+        got_row = fresh.get("frames", {}).get(key)
+        if got_row is None:
+            fails.append(f"frames[{key}]: missing from fresh run")
+            continue
+        if not got_row.get("allclose_vs_seed_loop", False):
+            fails.append(f"frames[{key}]: vectorized pipeline no longer "
+                         f"allclose to the seed loop reference")
+        band(f"frames[{key}].after_vectorized.fps",
+             got_row["after_vectorized"]["fps"],
+             want_row["after_vectorized"]["fps"])
+        band(f"frames[{key}].speedup_x",
+             got_row["speedup_x"], want_row["speedup_x"])
+
+    for s, want_row in committed.get("shard_sweep", {}).items():
+        got_row = fresh.get("shard_sweep", {}).get(s)
+        if got_row is None:
+            fails.append(f"shard_sweep[{s}]: missing from fresh run")
+            continue
+        if "skipped" in got_row or "skipped" in want_row:
+            # fewer devices here than on the committing machine (or vice
+            # versa): nothing comparable, and the run says so
+            continue
+        if not got_row.get("allclose_vs_1shard", False):
+            fails.append(f"shard_sweep[{s}]: sharded output no longer "
+                         f"allclose to the single-device path")
+        band(f"shard_sweep[{s}].fps", got_row["fps"], want_row["fps"])
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOL", "0.5")),
+                    help="fractional regression band (default 0.5: fail only "
+                         "below 50%% of the committed number — CI runners "
+                         "are slower and noisier than the committing box)")
+    ap.add_argument("--shards", default="1,2,4",
+                    help="shard counts to sweep (matches the committed JSON)")
+    ap.add_argument("--committed", default=COMMITTED)
+    ap.add_argument("--out",
+                    default=os.path.join(REPO, "results", "bench_gate",
+                                         "BENCH_table11_throughput.json"),
+                    help="fresh JSON (uploaded as a CI artifact)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed JSON from this run instead "
+                         "of gating (for refreshing the baseline)")
+    args = ap.parse_args()
+
+    with open(args.committed) as f:
+        committed = json.load(f)
+
+    from benchmarks.table11_throughput import bench_patch_pipeline
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    fresh = bench_patch_pipeline(
+        out_json=args.committed if args.update else args.out,
+        shard_counts=tuple(int(s) for s in args.shards.split(",")))
+    if args.update:
+        print(f"bench-gate: baseline {args.committed} updated")
+        return 0
+
+    fails = compare(committed, fresh, args.tol)
+    head = fresh["frames"]["smooth_all_bilinear"]["after_vectorized"]["fps"]
+    print(f"bench-gate: fresh smooth-frame fps={head:.3f} "
+          f"(committed {committed['frames']['smooth_all_bilinear']['after_vectorized']['fps']:.3f}), "
+          f"tol={args.tol:.0%}, artifact={args.out}")
+    if fails:
+        print("bench-gate: REGRESSION", file=sys.stderr)
+        for f_ in fails:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print("bench-gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,4 +45,30 @@ assert summary["frames"] == 2
 print("stream smoke OK:", summary)
 PY
 
+echo "== sharded patch-stream smoke (skips on single-device hosts) =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.api import ExecutionPlan, SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+
+n = jax.device_count()
+if n < 2:
+    print(f"sharded smoke skipped: {n} device(s) "
+          "(run under XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+else:
+    frame = degrade(jnp.asarray(random_image(0, 128, 128)), 2)
+    single = SREngine.from_config(ESSRConfig(scale=2), seed=1)
+    shardN = SREngine.from_config(ESSRConfig(scale=2), seed=1,
+                                  plan=ExecutionPlan(shards=min(4, n)))
+    r1, rn = single.upscale(frame), shardN.upscale(frame)
+    np.testing.assert_allclose(np.asarray(r1.image), np.asarray(rn.image),
+                               atol=1e-5)
+    res = shardN.serve(frame)
+    assert len(res.shard_counts) == shardN.plan.shards
+    print("sharded smoke OK:", shardN.plan.shards, "shards,",
+          "counts:", res.shard_counts)
+PY
+
 echo "smoke OK"

@@ -40,11 +40,14 @@ import jax
 
 from repro.api.plan import ExecutionPlan
 from repro.api.result import FrameResult, summarize_stats
-from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
+from repro.core import subnet_policy as sp
+from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
+                                 SwitchingConfig)
 from repro.core.edge_score import edge_score
 from repro.core.pipeline import (edge_selective_sr, resolve_backend,
                                  sr_all_patches_result, sr_whole)
 from repro.kernels.dispatch import resolve_interpret
+from repro.launch.mesh import make_patch_mesh
 from repro.models.essr import ESSRConfig, init_essr
 
 #: Default location of the cached briefly-trained benchmark supernets
@@ -67,9 +70,33 @@ class SREngine:
         self.plan = plan if plan is not None else ExecutionPlan()
         self.backend = backend
         self.deadline_s = deadline_s
-        self.switcher = AdaptiveSwitcher(
-            switching if switching is not None
-            else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
+        base_switching = (switching if switching is not None
+                          else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
+        self.switcher = AdaptiveSwitcher(base_switching)
+        # sharded patch stream (plan.shards > 1): routing/straggler control is
+        # per-shard regardless of hardware (one Algorithm-1 controller each,
+        # budgets split evenly); the device mesh only exists when more than
+        # one device is visible — otherwise dispatch degrades transparently
+        # to the single-device path with identical numerics.
+        self.bank: Optional[ShardSwitcherBank] = None
+        self.mesh = None
+        if self.plan.shards > 1:
+            self.bank = ShardSwitcherBank(base_switching,
+                                          shards=self.plan.shards)
+            avail = jax.device_count()
+            if avail > 1:
+                self.mesh = make_patch_mesh(min(self.plan.shards, avail))
+                if avail < self.plan.shards:
+                    warnings.warn(
+                        f"plan.shards={self.plan.shards} but only {avail} "
+                        f"devices visible; dispatching over {avail} "
+                        f"(per-shard routing control unchanged)")
+            else:
+                warnings.warn(
+                    f"plan.shards={self.plan.shards} on a single-device "
+                    f"host; dispatch falls back to one device "
+                    f"(per-shard routing control unchanged)")
+        self._macs = sp.SubnetMacs.make(cfg, self.plan.patch)
         self.stats: List[FrameResult] = []
 
     def _backend_label(self, plan: ExecutionPlan) -> str:
@@ -225,7 +252,8 @@ class SREngine:
             res = sr_all_patches_result(self.params, frame, self.cfg, width,
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
-                                        interpret=p.interpret, geometry=geom)
+                                        interpret=p.interpret, geometry=geom,
+                                        mesh=self.mesh)
         elif ids_override is None and p.subnet_policy != "threshold":
             # forced policies ignore edge scores — reuse the no-scoring path;
             # plan.decide is the single policy-name -> subnet-id mapping.
@@ -236,7 +264,8 @@ class SREngine:
             res = sr_all_patches_result(self.params, frame, self.cfg, forced,
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
-                                        interpret=p.interpret, geometry=geom)
+                                        interpret=p.interpret, geometry=geom,
+                                        mesh=self.mesh)
         else:
             # an explicit ids_override skips the edge unit entirely, so there
             # are no scores to report for that path
@@ -247,7 +276,8 @@ class SREngine:
                                     patch=p.patch, overlap=p.overlap,
                                     ids_override=ids_override,
                                     buckets=p.buckets, backend=self.backend,
-                                    interpret=p.interpret, geometry=geom)
+                                    interpret=p.interpret, geometry=geom,
+                                    mesh=self.mesh)
         res.image.block_until_ready()
         return FrameResult(image=res.image, mode=result_mode,
                            backend=self._backend_label(p), ids=res.ids,
@@ -256,7 +286,10 @@ class SREngine:
                            latency_s=time.perf_counter() - t0,
                            # thresholds only meaningful when routing used them
                            thresholds=(p.thresholds if routed_by_thresholds
-                                       else (0.0, 0.0)))
+                                       else (0.0, 0.0)),
+                           # sharding is engine-level (like backend): a
+                           # per-call plan cannot rebuild the mesh
+                           shards=self.plan.shards)
 
     def reference(self, frame: jax.Array, width: Optional[int] = None) -> FrameResult:
         """Whole-image convolution — the lossless reference of Table III."""
@@ -268,7 +301,16 @@ class SREngine:
         """One frame of the adaptive stream: edge scores -> Algorithm-1
         thresholds (with per-second C54 ceiling) -> edge-selective SR.
         Appends to ``self.stats``; a missed deadline raises the thresholds
-        (the paper's resource-adaptive mechanism as straggler mitigation)."""
+        (the paper's resource-adaptive mechanism as straggler mitigation).
+
+        With ``plan.shards > 1`` the frame's raster strips are routed by
+        per-shard controllers (`ShardSwitcherBank`), the routed buckets run
+        data-parallel over the patch mesh, and a missed deadline demotes
+        only the shards whose estimated MAC cost exceeds the balanced share
+        (a host-side load model — the deadline itself is the frame's global
+        wall clock) — their next-frame C54 share drops while balanced shards
+        keep their thresholds. Per-shard counts/thresholds/demotions are
+        surfaced on the `FrameResult`."""
         if self.plan.subnet_policy != "threshold":
             raise ValueError(
                 f"streaming routes adaptively and cannot honour forced "
@@ -279,23 +321,44 @@ class SREngine:
                                   self.cfg.scale)
         patches, pos = geom.extract(frame), geom.pos
         scores = np.asarray(edge_score(patches))
-        ids = self.switcher.assign(scores)
+        sharded = self.bank is not None
+        if sharded:
+            slices = geom.shard_slices(self.plan.shards)
+            ids = self.bank.assign(scores, slices)
+        else:
+            ids = self.switcher.assign(scores)
         res = edge_selective_sr(self.params, frame, self.cfg,
                                 patch=self.plan.patch, overlap=self.plan.overlap,
                                 ids_override=ids, buckets=self.plan.buckets,
                                 backend=self.backend,
                                 interpret=self.plan.interpret, geometry=geom,
+                                mesh=self.mesh,
                                 precomputed=(patches, pos, scores))
         res.image.block_until_ready()
         dt = time.perf_counter() - t0
         missed = bool(self.deadline_s and dt > self.deadline_s)
-        if missed:
-            self.switcher.demote_for_straggler(severity=1.0)
+        shard_counts = shard_thresholds = shard_missed = None
+        if sharded:
+            shard_counts = tuple(sp.subnet_counts(ids[sl]) for sl in slices)
+            shard_missed = self.bank.note_frame(
+                missed, [self._macs.total(c) for c in shard_counts])
+            shard_thresholds = self.bank.thresholds
+            # scalar thresholds field: across-shard mean (the per-shard truth
+            # is in shard_thresholds)
+            live = tuple(float(np.mean([t[i] for t in shard_thresholds]))
+                         for i in (0, 1))
+        else:
+            if missed:
+                self.switcher.demote_for_straggler(severity=1.0)
+            live = self.switcher.thresholds
         out = FrameResult(image=res.image, mode="edge_select",
                           backend=self.backend_label, ids=ids, scores=scores,
                           counts=res.counts, mac_saving=res.mac_saving,
-                          latency_s=dt, thresholds=self.switcher.thresholds,
-                          deadline_missed=missed)
+                          latency_s=dt, thresholds=live,
+                          deadline_missed=missed, shards=self.plan.shards,
+                          shard_counts=shard_counts,
+                          shard_thresholds=shard_thresholds,
+                          shard_deadline_missed=shard_missed)
         # retain only the compact record: holding every SR image would grow
         # unboundedly over a long stream (one 8K frame is ~100s of MB)
         self.stats.append(dataclasses.replace(out, image=None,

@@ -42,6 +42,13 @@ class ExecutionPlan:
     #: CPU-correctness fallback); True/False force it. Only consulted by the
     #: "pallas" backend.
     interpret: Optional[bool] = None
+    #: Data-parallel patch-stream shards. 1 = the single-device path. > 1
+    #: splits each frame's routed patch buckets across that many devices
+    #: (shard_map over a 1-D mesh) and gives each shard its own Algorithm-1
+    #: controller in the streaming path. When fewer devices are visible the
+    #: engine degrades transparently: routing/straggler control stays
+    #: per-shard, dispatch falls back to one device.
+    shards: int = 1
 
     def __post_init__(self):
         # keep the frozen/hashable contract even when callers pass a list
@@ -60,6 +67,9 @@ class ExecutionPlan:
         if self.interpret not in (None, True, False):
             raise ValueError(f"interpret must be None/True/False, "
                              f"got {self.interpret!r}")
+        if not isinstance(self.shards, int) or self.shards < 1:
+            raise ValueError(f"shards must be a positive int, "
+                             f"got {self.shards!r}")
 
     def replace(self, **kw) -> "ExecutionPlan":
         """Functional update (plans are frozen)."""

@@ -35,6 +35,14 @@ class FrameResult:
     # "final_thresholds" semantics)
     thresholds: Tuple[float, float] = (0.0, 0.0)
     deadline_missed: bool = False             # streaming only
+    # -- sharded streaming (plan.shards > 1); None on single-shard runs ------
+    shards: int = 1                           # logical patch-stream shards
+    # per-shard (bilinear, C27, C54) patch counts, raster-strip order
+    shard_counts: Optional[Tuple[Tuple[int, int, int], ...]] = None
+    # per-shard (t1, t2) AFTER this frame's adaptation + straggler demotion
+    shard_thresholds: Optional[Tuple[Tuple[float, float], ...]] = None
+    # which shards were demoted as stragglers on this frame
+    shard_deadline_missed: Optional[Tuple[bool, ...]] = None
 
     @property
     def n_patches(self) -> int:
@@ -50,7 +58,7 @@ def summarize_stats(stats) -> dict:
         return {}
     counts = np.array([s.counts for s in stats])
     total = counts.sum()
-    return {
+    out = {
         "frames": len(stats),
         "subnet_share": dict(zip(sp.SUBNET_NAMES,
                                  (counts.sum(0) / max(total, 1)).round(4).tolist())),
@@ -59,3 +67,19 @@ def summarize_stats(stats) -> dict:
         "deadline_misses": int(sum(s.deadline_missed for s in stats)),
         "final_thresholds": stats[-1].thresholds,
     }
+    shards = max((getattr(s, "shards", 1) or 1) for s in stats)
+    if shards > 1:
+        out["shards"] = shards
+        # straggler demotions per shard over the window (frames where that
+        # shard's overload forced a threshold raise)
+        misses = np.zeros(shards, np.int64)
+        for s in stats:
+            m = getattr(s, "shard_deadline_missed", None)
+            if m is not None:
+                misses[: len(m)] += np.asarray(m, np.int64)
+        out["shard_deadline_misses"] = misses.tolist()
+        last = next((s for s in reversed(stats)
+                     if getattr(s, "shard_thresholds", None) is not None), None)
+        if last is not None:
+            out["final_shard_thresholds"] = last.shard_thresholds
+    return out

@@ -1,7 +1,7 @@
 """--arch registry: name -> (FULL config, SMOKE config)."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.configs.base import LMConfig
 from repro.configs import (grok_1_314b, deepseek_v3_671b, seamless_m4t_medium,

@@ -11,12 +11,22 @@ Host-side feedback controller over the two edge thresholds:
 
 The same controller is reused by the serving runtime as *straggler
 mitigation*: a shard that falls behind its deadline raises the local
-thresholds, demoting its patches (Sec. "runtime" in DESIGN.md).
+thresholds, demoting its patches. `ShardSwitcherBank` implements that for
+the sharded patch stream: one `AdaptiveSwitcher` per shard (budgets split
+evenly), contiguous raster strips of each frame routed by each shard's local
+thresholds. The miss signal is the frame's single wall-clock deadline;
+*which* shards back off is attributed by a host-side load model — each
+shard's estimated MAC cost vs the balanced share — not by per-device
+timing (dispatch splits every subnet bucket evenly across devices, so no
+device maps 1:1 to a routing strip). A missed frame demotes the shards
+contributing the most compute, proportionally to their overload, shedding
+load where the C54 work originates while lightly-loaded strips keep their
+quality.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,3 +112,94 @@ class AdaptiveSwitcher:
     @property
     def thresholds(self) -> Tuple[float, float]:
         return (self.t1, self.t2)
+
+
+# ---------------------------------------------------------------------------
+# sharded streaming: one Algorithm-1 controller per shard
+# ---------------------------------------------------------------------------
+
+def per_shard_config(cfg: SwitchingConfig, shards: int) -> SwitchingConfig:
+    """Split a stream-level SwitchingConfig across ``shards`` equal shards.
+
+    Each shard sees ~1/shards of every frame's patches, so the per-second C54
+    budget and the per-frame trim bands scale down with it (positive values
+    floored at 1 so a tiny shard still adapts; a 0 stays 0 — ``frame_low=0``
+    means "never decay thresholds" and splitting must not re-enable it);
+    thresholds, steps and bounds are per-controller quantities and stay
+    as-is."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shards == 1:
+        return cfg
+    split = lambda v: max(1, v // shards) if v > 0 else v
+    return dataclasses.replace(
+        cfg,
+        c54_per_sec_budget=split(cfg.c54_per_sec_budget),
+        frame_high=split(cfg.frame_high),
+        frame_low=split(cfg.frame_low))
+
+
+class ShardSwitcherBank:
+    """Per-shard Algorithm-1 controllers + lock-step straggler mitigation.
+
+    ``assign`` routes one frame: shard ``k`` decides its contiguous slice of
+    the raster-order scores under its OWN live thresholds. ``note_frame``
+    feeds back the frame outcome: on a missed (global wall-clock) deadline,
+    the shards whose estimated MAC cost exceeds the balanced share are
+    treated as the overload source and get ``demote_for_straggler`` with
+    severity = overload ratio — a cost-model attribution, not a per-device
+    measurement; a uniformly loaded frame demotes every shard (aggregate
+    throughput must recover).
+    """
+
+    def __init__(self, cfg: Optional[SwitchingConfig] = None, shards: int = 1):
+        cfg = cfg if cfg is not None else SwitchingConfig()
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.shards = shards
+        self.switchers: List[AdaptiveSwitcher] = [
+            AdaptiveSwitcher(per_shard_config(cfg, shards))
+            for _ in range(shards)]
+
+    def assign(self, scores: np.ndarray,
+               slices: Sequence[slice]) -> np.ndarray:
+        """Frame scores (raster order) + shard slices -> subnet ids."""
+        if len(slices) != self.shards:
+            raise ValueError(f"got {len(slices)} slices for "
+                             f"{self.shards} shards")
+        scores = np.asarray(scores)
+        ids = np.empty(len(scores), dtype=np.int64)
+        for sw, sl in zip(self.switchers, slices):
+            ids[sl] = sw.assign(scores[sl])
+        return ids
+
+    def note_frame(self, missed: bool,
+                   costs: Sequence[float]) -> Tuple[bool, ...]:
+        """Feed back one frame's outcome; returns which shards were demoted.
+
+        ``costs``: estimated per-shard MAC cost of the frame just served
+        (`sp.SubnetMacs.total` over each shard's counts)."""
+        if len(costs) != self.shards:
+            raise ValueError(f"got {len(costs)} costs for "
+                             f"{self.shards} shards")
+        if not missed:
+            return (False,) * self.shards
+        costs = np.asarray(costs, np.float64)
+        mean = float(costs.mean())
+        if mean <= 0 or np.allclose(costs, mean):
+            # no imbalance signal: global overload, every shard backs off
+            demoted = [True] * self.shards
+            severities = [1.0] * self.shards
+        else:
+            demoted = [bool(c > mean) for c in costs]
+            # severity = how far past the balanced share, capped so one
+            # pathological frame cannot slam thresholds to the bound
+            severities = [min(float(c / mean), 3.0) for c in costs]
+        for sw, d, sev in zip(self.switchers, demoted, severities):
+            if d:
+                sw.demote_for_straggler(severity=sev)
+        return tuple(demoted)
+
+    @property
+    def thresholds(self) -> Tuple[Tuple[float, float], ...]:
+        return tuple(sw.thresholds for sw in self.switchers)

@@ -47,6 +47,25 @@ def grid_starts(size: int, patch: int, overlap: int) -> np.ndarray:
     return np.array(sorted(set(starts)), dtype=np.int64)
 
 
+def shard_slices(n: int, shards: int) -> Tuple[slice, ...]:
+    """Partition ``n`` raster-order patches into ``shards`` contiguous slices.
+
+    Balanced like ``np.array_split``: the first ``n % shards`` slices get one
+    extra patch, so a frame whose patch count does not divide evenly is still
+    covered exactly once. ``shards > n`` yields empty trailing slices (a
+    shard with no patches this frame is legal — its switcher simply sees an
+    empty score vector)."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    base, extra = divmod(n, shards)
+    out, start = [], 0
+    for k in range(shards):
+        stop = start + base + (1 if k < extra else 0)
+        out.append(slice(start, stop))
+        start = stop
+    return tuple(out)
+
+
 def _reflect_pad_hw(img: jax.Array, pad_h: int, pad_w: int) -> jax.Array:
     """Reflect-pad the bottom/right of (H,W,C) ``img``; falls back to edge
     padding for the (degenerate) remainder when a dim is shorter than the
@@ -96,6 +115,11 @@ class PatchGeometry:
     @property
     def n(self) -> int:
         return len(self.pos)
+
+    def shard_slices(self, shards: int) -> Tuple[slice, ...]:
+        """Contiguous raster-strip partition of this geometry's patches —
+        the unit of per-shard routing/straggler control (see core.adaptive)."""
+        return shard_slices(self.n, shards)
 
     def extract(self, img: jax.Array) -> jax.Array:
         """(H,W,C) -> (N,patch,patch,C): one device gather."""
@@ -291,7 +315,6 @@ def fuse_patches_crop(sr_patches: jax.Array, pos_lr: np.ndarray, scale: int,
     Kept as a loop: XLA scatter does not guarantee last-write-wins on
     duplicate indices, and this baseline is not on the hot path.
     """
-    ph = sr_patches.shape[1]
     out = jnp.zeros((out_hw[0], out_hw[1], sr_patches.shape[-1]), sr_patches.dtype)
     for i, (y, x) in enumerate(pos_lr):
         yy, xx = int(y) * scale, int(x) * scale

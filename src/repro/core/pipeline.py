@@ -80,6 +80,51 @@ def resolve_backend(name: str):
         raise ValueError(f"unknown backend {name!r}; choose from {sorted(BACKENDS)}")
 
 
+# ---------------------------------------------------------------------------
+# data-parallel per-subnet forward (the sharded patch stream)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _sharded_forward_fn(backend: str, mesh, cfg: ESSRConfig, width: int,
+                        interpret: Optional[bool]):
+    """jit(shard_map(forward)) splitting the patch batch over ``mesh``'s single
+    axis, params replicated. Cached per (backend, mesh, cfg, width, interpret)
+    so the shard_map callable (and its compiled executable) is built once per
+    routing regime. ``check_rep=False``: pallas_call has no replication rule,
+    and the batch axis carries no collectives anyway."""
+    from repro.distributed.sharding import patch_batch_spec
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    forward = resolve_backend(backend)
+    spec = patch_batch_spec(mesh)
+
+    def local(params, patches):
+        return forward(params, patches, cfg, width, interpret=interpret)
+
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=(P(), spec),
+                             out_specs=spec, check_rep=False))
+
+
+def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
+                    *, mesh, backend: str = "ref",
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Run one subnet's patch batch data-parallel across ``mesh`` devices.
+
+    Pads the batch up to a multiple of the mesh size by repeating the last
+    patch (cache-friendly duplicate work, never another subnet's patch) and
+    slices the output back, so callers need no divisibility guarantees."""
+    n = int(patches.shape[0])
+    k = int(mesh.size)
+    pad = (-n) % k
+    if pad:
+        patches = jnp.concatenate(
+            [patches, jnp.repeat(patches[-1:], pad, axis=0)], axis=0)
+    out = _sharded_forward_fn(backend, mesh, cfg, width, interpret)(
+        params, patches)
+    return out[:n] if pad else out
+
+
 @dataclasses.dataclass
 class SRResult:
     image: jax.Array
@@ -99,12 +144,19 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
                       geometry: Optional[PatchGeometry] = None,
                       precomputed: Optional[Tuple[jax.Array, np.ndarray,
                                                   np.ndarray]] = None,
+                      mesh=None,
                       use_loop_reference: bool = False) -> SRResult:
     """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image.
 
     ``geometry``: optional pre-fetched `PatchGeometry` (SREngine passes its
     plan's); resolved from the cache otherwise — either way the per-frame
     host work is index-free.
+
+    ``mesh``: optional 1-D device mesh (``launch.mesh.make_patch_mesh``).
+    When given with size > 1, every per-subnet batch is split across its
+    devices (shard_map data parallel, params replicated) and fused back
+    through the same scatter-add geometry — numerically identical to the
+    single-device path. ``None`` or size 1 is exactly the old path.
 
     ``precomputed``: optional (patches, pos, scores) from a caller that
     already extracted/scored this frame (the streaming path scores patches
@@ -116,6 +168,10 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
     path.
     """
     forward = resolve_backend(backend)
+    if mesh is not None and int(mesh.size) > 1:
+        def forward(params, patches, cfg, width, interpret=None):
+            return sharded_forward(params, patches, cfg, width, mesh=mesh,
+                                   backend=backend, interpret=interpret)
     s = cfg.scale
     h, w = int(frame.shape[0]), int(frame.shape[1])
     g = geometry if geometry is not None else get_geometry(h, w, patch,
@@ -172,7 +228,8 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
                           buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
                           backend: str = "ref",
                           interpret: Optional[bool] = None,
-                          geometry: Optional[PatchGeometry] = None) -> SRResult:
+                          geometry: Optional[PatchGeometry] = None,
+                          mesh=None) -> SRResult:
     """Every patch through one subnet (the non-edge-selective reference).
 
     The single implementation of forced routing — the edge-score pass is
@@ -186,7 +243,7 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
     ids = np.full((len(pos),), widths.index(width), dtype=np.int64)
     return edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
                              ids_override=ids, buckets=buckets, backend=backend,
-                             interpret=interpret, geometry=g,
+                             interpret=interpret, geometry=g, mesh=mesh,
                              precomputed=(patches, pos,
                                           np.zeros(len(pos), np.float32)))
 

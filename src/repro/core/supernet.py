@@ -10,7 +10,7 @@ Bilinear has no parameters and is never sampled.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

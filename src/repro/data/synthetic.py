@@ -17,8 +17,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import bicubic_resize
-
 
 def _smooth_field(rng: np.random.Generator, h: int, w: int, grid: int = 4) -> np.ndarray:
     coarse = rng.uniform(0, 1, size=(grid, grid, 3)).astype(np.float32)

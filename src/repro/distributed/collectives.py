@@ -10,9 +10,6 @@ against GSPMD's automatic choices.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -18,7 +18,6 @@ capacity becomes per-shard (more realistic than a global capacity pool).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -61,7 +60,6 @@ def moe_forward_shardmap(p: Dict[str, Any], x: jax.Array, cfg: LMConfig,
     """x: (B,S,D) sharded P(dp, mp, None). Returns (out, aux)."""
     e, k = cfg.n_experts, cfg.n_experts_per_tok
     d = cfg.d_model
-    f = cfg.moe_d_ff or cfg.d_ff
     mp_size = mesh.shape[mp]
     ep = cfg.moe_mode == "ep_alltoall" and e % mp_size == 0
     act = _act(cfg.act)

@@ -13,7 +13,6 @@ same program (SPMD) — stage identity comes from axis_index.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import LMConfig, ShapeSpec
+from repro.configs.base import LMConfig
 from repro.distributed.ctx import ShardCtx
 
 
@@ -59,6 +59,25 @@ def mesh_info(mesh: Mesh) -> MeshInfo:
     names = mesh.axis_names
     dp = tuple(a for a in names if a in ("pod", "data"))
     return MeshInfo(mesh, dp, "model")
+
+
+# ---------------------------------------------------------------------------
+# SR patch-stream specs (the 1-D serving mesh of launch.mesh.make_patch_mesh)
+# ---------------------------------------------------------------------------
+
+def patch_batch_spec(mesh: Mesh) -> P:
+    """Batch-of-patches spec: split the leading (patch) dim over the mesh's
+    single axis. The SR forward is embarrassingly batch-parallel, so this is
+    the whole sharding story for the patch stream."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"patch stream expects a 1-D mesh, got axes "
+                         f"{mesh.axis_names}")
+    return P(mesh.axis_names[0])
+
+
+def patch_batch_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding form of :func:`patch_batch_spec` (device_put targets)."""
+    return NamedSharding(mesh, patch_batch_spec(mesh))
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,6 @@ import functools
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.bsconv import bsconv_fused
 from repro.kernels.dispatch import default_interpret, pad_batch, resolve_interpret

@@ -7,7 +7,6 @@ shape/dtype sweeps in tests/test_kernels.py).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.edge_score import edge_score as _edge_score_ref
 from repro.models import layers as L

@@ -16,10 +16,9 @@ HBM bytes are analytic only (coefficients documented inline); XLA's raw
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.configs.base import LMConfig, ShapeSpec
-from repro.configs.base import param_count_estimate, active_param_count_estimate
+from repro.configs.base import param_count_estimate
 
 BF16 = 2
 F32 = 4

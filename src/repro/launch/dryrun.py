@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (ALL_SHAPES, LMConfig, ShapeSpec,
-                                active_param_count_estimate, shape_applicable)
+from repro.configs.base import (ALL_SHAPES, active_param_count_estimate,
+                                shape_applicable)
 from repro.configs.registry import ARCH_NAMES, get_config
 from repro.distributed import sharding as SH
 from repro.launch import costmodel as CM

@@ -30,3 +30,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU distributed tests (requires >=4 host devices)."""
     return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
+
+
+#: Axis name of the 1-D patch-stream mesh (the SR serving data-parallel axis).
+PATCH_AXIS = "shard"
+
+
+def make_patch_mesh(shards: int):
+    """1-D ``(shard,)`` mesh over the first ``shards`` devices — the SR patch
+    stream's data-parallel axis (each device runs a slice of a frame's routed
+    patch buckets; see repro.core.pipeline)."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shards > jax.device_count():
+        raise ValueError(f"requested {shards} shards but only "
+                         f"{jax.device_count()} devices are visible")
+    return jax.make_mesh((shards,), (PATCH_AXIS,), **_axis_kw(1))

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 # TPU v5e-class hardware constants (assignment-provided)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

@@ -25,9 +25,13 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=0.0)
     ap.add_argument("--backend", default="ref", choices=("ref", "pallas"),
                     help="forward path: pure-JAX jit or fused Pallas kernels")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-parallel patch-stream shards (each gets its "
+                         "own Algorithm-1 controller; dispatch uses up to "
+                         "this many devices, degrading to one transparently)")
     args = ap.parse_args()
 
-    from repro.api import SREngine
+    from repro.api import ExecutionPlan, SREngine
     from repro.core.adaptive import SwitchingConfig
     from repro.data.synthetic import degrade, random_image
     from repro.models.essr import ESSRConfig
@@ -40,6 +44,7 @@ def main():
                          frame_low=max(1, int(n_patches * 0.30)))
     engine = SREngine.from_checkpoint(
         args.ckpt, cfg=ESSRConfig(scale=args.scale), backend=args.backend,
+        plan=ExecutionPlan(shards=args.shards),
         switching=sw, deadline_s=args.deadline_ms / 1e3 or None, verbose=True)
 
     def frames():
@@ -52,7 +57,11 @@ def main():
     for i, (hr, lr) in enumerate(frames()):
         res = engine.serve(lr)
         psnrs.append(float(psnr_y(res.image, hr)))
-        print(f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  thresholds={res.thresholds}")
+        line = f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  thresholds={res.thresholds}"
+        if res.shard_counts is not None:
+            line += (f"  shard_c54={[c[2] for c in res.shard_counts]}"
+                     f"  demoted={list(res.shard_deadline_missed)}")
+        print(line)
     s = engine.summary()
     print("\nsummary:", {k: v for k, v in s.items()})
     print(f"mean PSNR_Y {np.mean(psnrs):.2f} dB")

@@ -7,15 +7,13 @@ arrays, are the production train/serve step functions (launch/train.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import (LMConfig, ShapeSpec, TRAIN_4K, PREFILL_32K,
-                                DECODE_32K, LONG_500K)
+from repro.configs.base import LMConfig, ShapeSpec
 from repro.distributed import sharding as SH
 from repro.distributed.ctx import use_ctx
 from repro.models.lm import encdec as E

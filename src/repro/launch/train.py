@@ -13,7 +13,6 @@ Example:
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -69,7 +68,7 @@ def train_lm_smoke(args):
     opt = ST.make_optimizer()
     step = jax.jit(ST.make_train_step(cfg, opt, remat=False))
     key = jax.random.PRNGKey(0)
-    init = ST.abstract_train_state(cfg, opt)
+    ST.abstract_train_state(cfg, opt)   # shape-checks cfg before init
     from repro.models.lm import transformer as T
     from repro.models.lm import encdec as E
     p = (E.init_encdec if cfg.is_encoder_decoder else T.init_lm)(key, cfg)

@@ -13,8 +13,7 @@ in repro/distributed/collectives.py for the hillclimb.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ the cross-attn K/V precomputed once at prefill.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

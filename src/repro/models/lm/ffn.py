@@ -18,8 +18,7 @@ weight-shared half-width slice (C54 vs C27, ARM-style shared weights).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

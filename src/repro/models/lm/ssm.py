@@ -10,7 +10,6 @@ state update (the "KV cache" of an SSM is its state — constant in seq_len).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

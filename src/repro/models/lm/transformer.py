@@ -15,8 +15,6 @@ tensor — 550 TB for grok-1's train_4k cell — is never materialized.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -14,8 +14,7 @@ ESSR forward, and an integer-consistency check used by tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ Design for 1000+ nodes, exercised here at simulation scale:
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
 import numpy as np
 

@@ -38,12 +38,13 @@ class FrameServer:
     def __init__(self, params, cfg: ESSRConfig,
                  switching: Optional[SwitchingConfig] = None,
                  patch: int = 32, overlap: int = 2,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None, shards: int = 1):
         warnings.warn(
             "FrameServer is deprecated; use repro.api.SREngine.stream()",
             DeprecationWarning, stacklevel=2)
         self.engine = SREngine(params, cfg,
-                               plan=ExecutionPlan(patch=patch, overlap=overlap),
+                               plan=ExecutionPlan(patch=patch, overlap=overlap,
+                                                  shards=shards),
                                switching=switching, deadline_s=deadline_s)
         self._stats: List[FrameStats] = []       # incremental mirror
         self._mirrored = 0                       # engine records consumed

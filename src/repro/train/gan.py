@@ -6,7 +6,7 @@ MultiStepLR. A compact patch discriminator stands in for [24]'s.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Tuple
+from typing import Any, Dict, Iterator
 
 import jax
 import jax.numpy as jnp

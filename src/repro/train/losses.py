@@ -9,7 +9,6 @@ loss is implemented from its definition (local-variance-weighted residual).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

@@ -8,8 +8,7 @@ adafactor (for the 100B+ dry-run configs' optimizer-state math), schedules
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

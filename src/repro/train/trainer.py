@@ -6,8 +6,7 @@ all supported; examples run a scaled-down schedule on CPU.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Any, Callable, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

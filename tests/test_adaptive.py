@@ -1,9 +1,12 @@
 """Resource-adaptive model switching — Algorithm 1 (Sec. IV-A)."""
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import subnet_policy as sp
-from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
+from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
+                                 SwitchingConfig, per_shard_config)
+from repro.core.patching import shard_slices
 
 
 def _mk(budget=10_000, high=1000, low=700, fps=30):
@@ -64,3 +67,96 @@ def test_straggler_demotion_raises_thresholds():
     t1, t2 = sw.thresholds
     sw.demote_for_straggler(severity=2.0)
     assert sw.thresholds == (t1 + 2, t2 + 10)
+
+
+# -- sharded streaming: ShardSwitcherBank ------------------------------------
+
+def test_per_shard_config_splits_budgets():
+    cfg = SwitchingConfig(c54_per_sec_budget=100, frame_high=40, frame_low=20)
+    split = per_shard_config(cfg, 4)
+    assert (split.c54_per_sec_budget, split.frame_high, split.frame_low) == \
+        (25, 10, 5)
+    assert (split.t1, split.t2) == (cfg.t1, cfg.t2)   # per-controller, unsplit
+    assert per_shard_config(cfg, 1) is cfg
+    tiny = per_shard_config(SwitchingConfig(c54_per_sec_budget=2,
+                                            frame_high=2, frame_low=1), 8)
+    assert tiny.c54_per_sec_budget >= 1 and tiny.frame_low >= 1
+    # frame_low=0 means "never decay thresholds": splitting must not
+    # re-enable decay by flooring it to 1
+    frozen = per_shard_config(SwitchingConfig(frame_low=0), 4)
+    assert frozen.frame_low == 0
+    with pytest.raises(ValueError):
+        per_shard_config(cfg, 0)
+
+
+def _bank(shards=2, **kw):
+    base = dict(c54_per_sec_budget=10 ** 9, frame_high=10 ** 6, frame_low=0)
+    base.update(kw)
+    return ShardSwitcherBank(SwitchingConfig(**base), shards=shards)
+
+
+def test_bank_assigns_per_shard_thresholds():
+    """Each shard routes its raster strip under its OWN live thresholds."""
+    bank = _bank(shards=2)
+    bank.switchers[1].t1, bank.switchers[1].t2 = 100.0, 200.0
+    scores = np.array([50.0, 50.0, 50.0, 50.0])     # C54 at default (8, 40)
+    ids = bank.assign(scores, shard_slices(4, 2))
+    assert ids.tolist() == [sp.C54, sp.C54, sp.BILINEAR, sp.BILINEAR]
+
+
+def test_straggler_shard_demotes_and_c54_drops():
+    """Satellite criterion: a shard that misses its deadline slice raises
+    (t1, t2), and its next-frame C54 count drops; its balanced peer keeps
+    routing at the old thresholds."""
+    bank = _bank(shards=2)
+    slices = shard_slices(8, 2)
+    # shard 0's scores sit just above t2=40: one +5 demotion step moves them
+    # below; shard 1 stays cheap (all bilinear)
+    scores = np.array([41.0, 42.0, 43.0, 44.0, 1.0, 1.0, 1.0, 1.0])
+    ids = bank.assign(scores, slices)
+    assert sp.subnet_counts(ids[slices[0]])[2] == 4          # all C54
+    t_before = bank.thresholds
+    costs = [4 * 1000.0, 0.0]                                # shard 0 heavy
+    demoted = bank.note_frame(True, costs)
+    assert demoted == (True, False)
+    t_after = bank.thresholds
+    assert t_after[0][0] > t_before[0][0] and t_after[0][1] > t_before[0][1]
+    assert t_after[1] == t_before[1]                         # peer untouched
+    ids2 = bank.assign(scores, slices)
+    assert sp.subnet_counts(ids2[slices[0]])[2] < 4          # C54 share fell
+
+
+def test_uniform_overload_demotes_all_shards():
+    bank = _bank(shards=3)
+    before = bank.thresholds
+    assert bank.note_frame(True, [5.0, 5.0, 5.0]) == (True, True, True)
+    assert all(a[1] > b[1] for a, b in zip(bank.thresholds, before))
+    # a met deadline never demotes
+    assert bank.note_frame(False, [9.0, 0.0, 0.0]) == (False, False, False)
+
+
+def test_sustained_misses_respect_bounds():
+    """Thresholds stay inside t1_bounds/t2_bounds (and ordered) no matter how
+    long a shard keeps missing."""
+    cfg = SwitchingConfig(c54_per_sec_budget=10 ** 9, frame_high=10 ** 6,
+                          frame_low=0, t1_bounds=(0.0, 100.0),
+                          t2_bounds=(1.0, 150.0))
+    bank = ShardSwitcherBank(cfg, shards=2)
+    scores = np.full(8, 255.0)
+    for _ in range(200):
+        bank.assign(scores, shard_slices(8, 2))
+        bank.note_frame(True, [7.0, 1.0])
+    for (t1, t2) in bank.thresholds:
+        assert 0.0 <= t1 <= 100.0 and t1 < t2 <= 151.0   # clamp keeps order
+    # the heavy shard is pinned at (or within one step of) the ceiling
+    assert bank.thresholds[0][0] == 100.0
+
+
+def test_bank_validates_shapes():
+    bank = _bank(shards=2)
+    with pytest.raises(ValueError):
+        bank.assign(np.zeros(4), shard_slices(4, 3))
+    with pytest.raises(ValueError):
+        bank.note_frame(True, [1.0])
+    with pytest.raises(ValueError):
+        ShardSwitcherBank(shards=0)

@@ -1,10 +1,8 @@
 """Checkpointing + fault-tolerant supervision + elastic restore."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.runtime.fault_tolerance import (InjectedFailure, StragglerMonitor,

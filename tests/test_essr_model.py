@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.essr import (ESSRConfig, ESSR_X2, ESSR_X4, essr_forward,
                                essr_macs, essr_macs_per_lr_pixel,

@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import _flat_sfb
-from repro.models.essr import ESSR_X4, ESSRConfig, essr_forward, init_essr
+from repro.models.essr import ESSR_X4, essr_forward, init_essr
 
 SHAPES = [(4, 8, 8), (8, 16, 16), (2, 34, 34)]       # (N, H, W) incl. halo size
 DTYPES = [jnp.float32, jnp.bfloat16]

@@ -1,8 +1,6 @@
 """Per-architecture smoke tests (assignment f): reduced config of each of the
 10 archs runs one forward/train step on CPU, asserting shapes + no NaNs;
 plus decode<->prefill consistency on representatives of each family."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

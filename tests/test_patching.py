@@ -1,5 +1,4 @@
 """Slim-overlap patching + overlap-average fusion (Sec. IV-I)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -8,8 +8,6 @@ from repro.models.essr import ESSR_X4, ESSRConfig, essr_forward, init_essr
 from repro.quant.pams import (QuantConfig, calibrate_act_scales, int_codes,
                               quantize, quantized_essr_forward,
                               quantize_weight_tree)
-from repro.train.losses import psnr
-
 
 @settings(max_examples=30, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 10]))

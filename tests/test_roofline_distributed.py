@@ -11,8 +11,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

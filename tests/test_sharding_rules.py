@@ -3,7 +3,6 @@ meshes (validated abstractly — no devices needed)."""
 import math
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -2,11 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.adaptive import SwitchingConfig
 from repro.data.synthetic import degrade, patch_batches, random_image
-from repro.models.essr import ESSRConfig, essr_forward, init_essr
+from repro.models.essr import ESSRConfig, init_essr
 from repro.runtime.serving import FrameServer
 from repro.train import optimizer as O
 from repro.train import losses as Ls
