@@ -7,10 +7,15 @@
     the 1-D patch mesh) on the same micro-config frame, recorded into the
     same JSON — on CPU the virtual devices share cores so this measures
     dispatch overhead + correctness, on real hardware it measures scaling,
-(c) measured CPU frame throughput per subnet through `SREngine`, once per
+(c) a quant sweep (``ExecutionPlan.quant``-style serving through the same
+    pipeline): per PAMS mode (fxp10/int8) the ref-backend fake-quant frame
+    fps and its SNR vs the fp32 pipeline, plus a pallas-int8
+    integer-consistency flag (kernel codes bit-exact vs the jnp integer
+    reference on one patch batch) — all recorded into the same JSON,
+(d) measured CPU frame throughput per subnet through `SREngine`, once per
     backend ("ref" pure-JAX jit vs "pallas" fused kernel groups, interpret
     mode on CPU), exercising the full patch->route->batch->fuse pipeline, and
-(d) the TPU-side projection from the dry-run roofline (results/dryrun),
+(e) the TPU-side projection from the dry-run roofline (results/dryrun),
     i.e. the frames/s one v5e chip supports at the measured bytes/flops.
 Power/gate count are N/A on CPU and stated as such."""
 import argparse
@@ -103,6 +108,51 @@ def _measure_shards(params, cfg, frame, shard_counts) -> dict:
     return rows
 
 
+def _measure_quant(params, cfg, frame) -> dict:
+    """The quant sweep: the mixed-content frame through the quantized
+    serving path per PAMS mode. Alphas are PTQ-calibrated from the frame's
+    own patch batch (the content being served is the honest calibration
+    set for a single-frame micro-benchmark). SNR is measured against the
+    fp32 pipeline output — the machine-portable accuracy signal the bench
+    gate defends (absolute PSNR would move with the random-init weights)."""
+    from repro.core.patching import get_geometry
+    from repro.kernels.qconv import essr_forward_qkernels, essr_forward_qref
+    from repro.quant.pams import build_quant_pack
+
+    h, w = int(frame.shape[0]), int(frame.shape[1])
+    g = get_geometry(h, w, 32, 2, cfg.scale)
+    sample = g.extract(frame)[:16]
+    fp_img = np.asarray(jax.block_until_ready(
+        edge_selective_sr(params, frame, cfg, backend="ref").image))
+    rows = {}
+    packs = {}
+    for mode in ("fxp10", "int8"):
+        pack = packs[mode] = build_quant_pack(params, cfg, mode, sample)
+        run = lambda: edge_selective_sr(params, frame, cfg, backend="ref",
+                                        quant=pack).image
+        img = np.asarray(jax.block_until_ready(run()))    # warm quant jits
+        err = img - fp_img
+        snr_db = float(10 * np.log10(np.mean(fp_img ** 2)
+                                     / max(np.mean(err ** 2), 1e-20)))
+        us = _best_of(run, reps=3)
+        emit(f"table11_quant_{mode}", us,
+             f"fps={1e6 / us:.3f};snr_db_vs_fp32={snr_db:.2f}")
+        rows[mode] = {"us_per_frame": round(us, 1),
+                      "fps": round(1e6 / us, 3),
+                      "snr_db_vs_fp32": round(snr_db, 2)}
+
+    # integer-consistency spot check (cheap, hard-gated in CI): the pallas
+    # int8 kernel chain must be bit-exact vs the jnp integer reference
+    batch = g.extract(frame)[:8]
+    ker = essr_forward_qkernels(params, batch, cfg, width=cfg.channels,
+                                pack=packs["int8"])
+    ref = essr_forward_qref(params, batch, cfg, cfg.channels,
+                            pack=packs["int8"])
+    bitexact = bool(np.array_equal(np.asarray(ker), np.asarray(ref)))
+    emit("table11_quant_pallas_int8_bitexact", 0.0, f"bitexact={bitexact}")
+    return {"modes": rows, "pallas_int8_bitexact": bitexact}
+
+
 def bench_patch_pipeline(out_json: str = BENCH_JSON,
                          shard_counts=(1, 2, 4)) -> dict:
     """Host-loop removal, measured on one 480x270 -> x4 frame through the
@@ -143,6 +193,9 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON,
             params, cfg,
             jnp.where((yy < 0.5)[..., None], smooth, noise), shard_counts),
         "shard_sweep_devices": jax.device_count(),
+        # same mixed frame through the PAMS quantized serving path
+        "quant_sweep": _measure_quant(
+            params, cfg, jnp.where((yy < 0.5)[..., None], smooth, noise)),
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)

@@ -8,7 +8,19 @@ thresholds (the C54/sec ceiling demotes overflow patches to C27 — throughput
 guaranteed, quality floor kept), per-subnet batched execution,
 overlap+average fusion. Prints Table-XI-style summary. Accepts every
 ``repro.launch.serve`` flag (--ckpt, --budget, --backend, --deadline-ms,
---shards).
+--shards, --quant).
+
+Quantized serving: ``--quant fxp10`` streams every frame through the
+paper's whole-model FXP10 PAMS lattice (fake-quant emulation on the "ref"
+backend); ``--quant int8 --backend pallas`` serves the integer-domain int8
+kernel stack (int8 codes between fused groups, int32-accumulate matmuls).
+Alphas PTQ-calibrate once at engine construction and the served datapath is
+visible in the printed backend label ("ref-fxp10", "pallas-int8", ...):
+
+    PYTHONPATH=src python examples/serve_8k.py --frames 4 --hw 96 \\
+      --quant fxp10
+    PYTHONPATH=src python examples/serve_8k.py --frames 4 --hw 96 \\
+      --quant int8 --backend pallas
 
 Sharded streaming: ``--shards N`` splits each frame's routed patch buckets
 across up to N devices (one Algorithm-1 controller per raster-strip shard;

@@ -11,7 +11,13 @@ and fails when the fresh numbers regress past a tolerance band:
     ``--tol`` of the committed ratio, or the host-loop removal has rotted;
   * absolute FPS is compared within the same band — wide by default because
     CI runners are not the machine that committed the JSON; tighten with
-    ``--tol`` (or ``BENCH_GATE_TOL``) on a pinned perf box.
+    ``--tol`` (or ``BENCH_GATE_TOL``) on a pinned perf box;
+  * the quant sweep gates on BOTH axes: ``pallas_int8_bitexact`` is a hard
+    zero-tolerance flag (the integer kernels drifting off the fake-quant
+    lattice is a correctness bug), per-mode fps uses the same band, and
+    ``snr_db_vs_fp32`` must stay within ``--snr-tol-db`` (default 3 dB) of
+    the committed accuracy — a machine-portable signal, unlike absolute
+    PSNR on random-init weights.
 
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
@@ -31,7 +37,8 @@ sys.path[:0] = [REPO, os.path.join(REPO, "src")]
 COMMITTED = os.path.join(REPO, "BENCH_table11_throughput.json")
 
 
-def compare(committed: dict, fresh: dict, tol: float) -> list:
+def compare(committed: dict, fresh: dict, tol: float,
+            snr_tol_db: float = 3.0) -> list:
     """Return a list of human-readable failure strings (empty == gate holds)."""
     fails = []
 
@@ -67,6 +74,24 @@ def compare(committed: dict, fresh: dict, tol: float) -> list:
             fails.append(f"shard_sweep[{s}]: sharded output no longer "
                          f"allclose to the single-device path")
         band(f"shard_sweep[{s}].fps", got_row["fps"], want_row["fps"])
+
+    want_q = committed.get("quant_sweep", {})
+    got_q = fresh.get("quant_sweep", {})
+    if want_q:
+        if not got_q.get("pallas_int8_bitexact", False):
+            fails.append("quant_sweep: pallas int8 kernel chain no longer "
+                         "bit-exact vs the integer-domain reference")
+        for mode, want_row in want_q.get("modes", {}).items():
+            got_row = got_q.get("modes", {}).get(mode)
+            if got_row is None:
+                fails.append(f"quant_sweep[{mode}]: missing from fresh run")
+                continue
+            band(f"quant_sweep[{mode}].fps", got_row["fps"], want_row["fps"])
+            if got_row["snr_db_vs_fp32"] < want_row["snr_db_vs_fp32"] - snr_tol_db:
+                fails.append(
+                    f"quant_sweep[{mode}].snr_db_vs_fp32: "
+                    f"{got_row['snr_db_vs_fp32']:.2f} < committed "
+                    f"{want_row['snr_db_vs_fp32']:.2f} - {snr_tol_db:g} dB")
     return fails
 
 
@@ -79,6 +104,11 @@ def main() -> int:
                          "are slower and noisier than the committing box)")
     ap.add_argument("--shards", default="1,2,4",
                     help="shard counts to sweep (matches the committed JSON)")
+    ap.add_argument("--snr-tol-db", type=float,
+                    default=float(os.environ.get("BENCH_GATE_SNR_TOL_DB",
+                                                 "3.0")),
+                    help="allowed drop of the quant sweep's snr_db_vs_fp32 "
+                         "below the committed value (dB)")
     ap.add_argument("--committed", default=COMMITTED)
     ap.add_argument("--out",
                     default=os.path.join(REPO, "results", "bench_gate",
@@ -101,7 +131,7 @@ def main() -> int:
         print(f"bench-gate: baseline {args.committed} updated")
         return 0
 
-    fails = compare(committed, fresh, args.tol)
+    fails = compare(committed, fresh, args.tol, snr_tol_db=args.snr_tol_db)
     head = fresh["frames"]["smooth_all_bilinear"]["after_vectorized"]["fps"]
     print(f"bench-gate: fresh smooth-frame fps={head:.3f} "
           f"(committed {committed['frames']['smooth_all_bilinear']['after_vectorized']['fps']:.3f}), "

@@ -28,6 +28,32 @@ np.testing.assert_allclose(np.asarray(r.image), np.asarray(p.image), atol=1e-5)
 print("pallas smoke OK:", p.backend, p.counts)
 PY
 
+echo "== quantized serving smoke (fxp10 budget vs fp32 + pallas-int8 label) =="
+python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+from repro.api import ExecutionPlan, SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+from repro.train.losses import psnr_y
+
+hr = jnp.asarray(random_image(0, 128, 128))
+frame = degrade(hr, 2)
+fp = SREngine.from_config(ESSRConfig(scale=2), seed=1)
+q10 = SREngine.from_config(ESSRConfig(scale=2), seed=1,
+                           plan=ExecutionPlan(quant="fxp10"))
+r_fp, r_q = fp.upscale(frame), q10.upscale(frame)
+assert r_q.backend == "ref-fxp10", r_q.backend
+assert np.array_equal(r_q.ids, r_fp.ids)          # quant never moves routing
+drop = float(psnr_y(r_fp.image, hr)) - float(psnr_y(r_q.image, hr))
+assert drop < 0.6, f"fxp10 PSNR drop {drop:.3f} dB exceeds the paper budget"
+q8 = SREngine.from_config(ESSRConfig(scale=2), seed=1, backend="pallas",
+                          plan=ExecutionPlan(quant="int8"))
+r8 = q8.upscale(frame)
+assert r8.backend.endswith("-int8"), r8.backend
+print(f"quant smoke OK: {r_q.backend} drop={drop:.3f}dB, {r8.backend}")
+PY
+
 echo "== SREngine 2-frame stream smoke =="
 python - <<'PY'
 import jax.numpy as jnp

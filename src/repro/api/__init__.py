@@ -7,7 +7,8 @@
     for r in engine.stream(frames): ...          # Algorithm-1 serving
 """
 from repro.api.engine import SREngine
-from repro.api.plan import ExecutionPlan, SUBNET_POLICIES
+from repro.api.plan import ExecutionPlan, QUANT_MODES, SUBNET_POLICIES
 from repro.api.result import FrameResult
 
-__all__ = ["SREngine", "ExecutionPlan", "FrameResult", "SUBNET_POLICIES"]
+__all__ = ["SREngine", "ExecutionPlan", "FrameResult", "QUANT_MODES",
+           "SUBNET_POLICIES"]

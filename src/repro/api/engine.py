@@ -12,6 +12,14 @@ One engine owns:
                   what actually ran is surfaced as FrameResult.backend
                   ("pallas" vs "pallas-interpret").
 
+With ``plan.quant`` set ("fxp10" | "int8") the engine serves the PAMS
+quantized datapath: per-subnet activation alphas are PTQ-calibrated at
+construction (``calibrate=`` batch, or a deterministic synthetic default)
+and cached as JSON alongside the bench-model cache; the "ref" backend serves
+fake-quant emulation, "pallas" the integer-domain kernel stack
+(`repro.kernels.qconv`). The served mode is appended to the backend label
+("ref-fxp10", "pallas-int8", "pallas-interpret-int8", ...).
+
 and exposes the paper's modes as methods returning one `FrameResult` shape:
 
   * ``upscale(frame)``                    — Fig. 1 edge-selective pipeline
@@ -37,6 +45,7 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.api.plan import ExecutionPlan
 from repro.api.result import FrameResult, summarize_stats
@@ -57,19 +66,42 @@ DEFAULT_BENCH_CACHE = os.environ.get("BENCH_CACHE", "/root/repo/results/bench_mo
 MODES = ("edge_select", "all_patches", "whole")
 
 
+def default_calibration_batch(patch: int, scale: int, n: int = 16,
+                              seed: int = 1234) -> jax.Array:
+    """Deterministic PTQ calibration batch: ``n`` synthetic LR patches in
+    [0,1], one per procedural frame (the plain/texture/edges mixture the
+    edge-selective router discriminates), sized to the plan's patch so the
+    calibration forward sees serving-shaped batches."""
+    from repro.data.synthetic import degrade, random_image
+    return jnp.stack([
+        degrade(jnp.asarray(random_image(seed + i, patch * scale,
+                                         patch * scale)), scale)
+        for i in range(n)])
+
+
 class SREngine:
     """Facade over the ESSR inference pipeline. See module docstring."""
 
     def __init__(self, params: Dict[str, Any], cfg: ESSRConfig,
                  plan: Optional[ExecutionPlan] = None, backend: str = "ref",
                  switching: Optional[SwitchingConfig] = None,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 calibrate: Optional[jax.Array] = None,
+                 quant_cache: Optional[str] = None):
         resolve_backend(backend)            # fail fast on typos
         self.params = params
         self.cfg = cfg
         self.plan = plan if plan is not None else ExecutionPlan()
         self.backend = backend
         self.deadline_s = deadline_s
+        # quantized serving (plan.quant): PTQ-calibrate per-subnet alphas
+        # once, here — the pack is engine state like the mesh, so every
+        # frame reuses the same lattice. ``calibrate`` is a (N,h,w,3) LR
+        # batch in [0,1]; None falls back to a deterministic synthetic
+        # batch covering the three content classes. ``quant_cache`` is a
+        # directory to cache the alphas in (from_checkpoint passes the
+        # bench-model cache), only consulted for the default batch.
+        self.qpack = self._resolve_quant_pack(calibrate, quant_cache)
         base_switching = (switching if switching is not None
                           else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
         self.switcher = AdaptiveSwitcher(base_switching)
@@ -99,14 +131,54 @@ class SREngine:
         self._macs = sp.SubnetMacs.make(cfg, self.plan.patch)
         self.stats: List[FrameResult] = []
 
+    def _resolve_quant_pack(self, calibrate, quant_cache):
+        """plan.quant -> calibrated `QuantPack` (None for fp32 serving)."""
+        mode = self.plan.quant
+        if mode is None:
+            return None
+        from repro.quant.pams import (build_quant_pack, load_quant_pack,
+                                      params_fingerprint, save_quant_pack)
+        if calibrate is None:
+            calibrate = default_calibration_batch(self.plan.patch,
+                                                  self.cfg.scale)
+            cache_path = None
+            if quant_cache:
+                # keyed by the weights' content hash AND the plan's patch
+                # size (the default calibration batch is patch-shaped, so
+                # alphas from one patch size must not serve another): alphas
+                # calibrated for other weights/configs never serve here
+                fp = params_fingerprint(self.params)
+                cache_path = os.path.join(
+                    quant_cache, f"quant_alphas_{mode}_x{self.cfg.scale}"
+                                 f"_sfb{self.cfg.n_sfb}_p{self.plan.patch}"
+                                 f"_{fp}.json")
+                cached = load_quant_pack(cache_path, fp)
+                if cached is not None:
+                    return cached
+            pack = build_quant_pack(self.params, self.cfg, mode, calibrate)
+            if cache_path:
+                try:
+                    os.makedirs(quant_cache, exist_ok=True)
+                    save_quant_pack(cache_path, pack, fp)
+                except OSError as e:
+                    warnings.warn(f"quant alpha cache write failed: {e!r}")
+            return pack
+        # user-supplied calibration data: always calibrate fresh (the cache
+        # is keyed by weights only and cannot tell batches apart)
+        return build_quant_pack(self.params, self.cfg, mode,
+                                jnp.asarray(calibrate))
+
     def _backend_label(self, plan: ExecutionPlan) -> str:
         """What actually executes, surfaced in FrameResult.backend: "pallas"
         only when the kernels compile (TPU/GPU or interpret=False); the CPU
         interpreter fallback is labeled "pallas-interpret" so consumers never
-        mistake the correctness path for the fast one."""
+        mistake the correctness path for the fast one. A quant mode is
+        appended ("ref-fxp10", "pallas-int8", "pallas-interpret-int8", ...)
+        so a quantized frame can never masquerade as fp32."""
+        base = self.backend
         if self.backend == "pallas" and resolve_interpret(plan.interpret):
-            return "pallas-interpret"
-        return self.backend
+            base = "pallas-interpret"
+        return base if plan.quant is None else f"{base}-{plan.quant}"
 
     @property
     def backend_label(self) -> str:
@@ -118,12 +190,17 @@ class SREngine:
     def from_config(cls, cfg: Optional[ESSRConfig] = None, *, seed: int = 0,
                     plan: Optional[ExecutionPlan] = None, backend: str = "ref",
                     switching: Optional[SwitchingConfig] = None,
-                    deadline_s: Optional[float] = None) -> "SREngine":
-        """Fresh engine with randomly initialised supernet weights."""
+                    deadline_s: Optional[float] = None,
+                    calibrate: Optional[jax.Array] = None) -> "SREngine":
+        """Fresh engine with randomly initialised supernet weights.
+
+        ``calibrate``: PTQ calibration batch for ``plan.quant`` modes
+        ((N,h,w,3) LR in [0,1]; None = deterministic synthetic default)."""
         cfg = cfg if cfg is not None else ESSRConfig()
         params = init_essr(jax.random.PRNGKey(seed), cfg)
         return cls(params, cfg, plan=plan, backend=backend,
-                   switching=switching, deadline_s=deadline_s)
+                   switching=switching, deadline_s=deadline_s,
+                   calibrate=calibrate)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: Optional[str] = None, *,
@@ -134,6 +211,7 @@ class SREngine:
                         backend: str = "ref",
                         switching: Optional[SwitchingConfig] = None,
                         deadline_s: Optional[float] = None,
+                        calibrate: Optional[jax.Array] = None,
                         verbose: bool = False) -> "SREngine":
         """Engine with trained weights, resolved in priority order:
 
@@ -142,6 +220,11 @@ class SREngine:
         2. the newest cached benchmark supernet under ``bench_cache``
            matching this config (``essr_x<scale>_sfb<n>_*``);
         3. fresh random init (so demos never hard-fail on a cold cache).
+
+        ``calibrate``: PTQ calibration batch for ``plan.quant`` modes; when
+        None the deterministic synthetic default is used and the resulting
+        alphas are cached as JSON alongside ``bench_cache`` (keyed by the
+        weights' content hash, so new weights always recalibrate).
         """
         from repro.ckpt.checkpoint import CheckpointManager
 
@@ -197,7 +280,8 @@ class SREngine:
                 warnings.warn(f"no bench-cache candidate under {bench_cache} "
                               f"restored cleanly; serving fresh random init")
         return cls(params, cfg, plan=plan, backend=backend,
-                   switching=switching, deadline_s=deadline_s)
+                   switching=switching, deadline_s=deadline_s,
+                   calibrate=calibrate, quant_cache=bench_cache)
 
     # -- single-frame inference ---------------------------------------------
 
@@ -213,7 +297,9 @@ class SREngine:
           * "all_patches"  — every patch through the subnet of ``width``
             (the non-edge-selective ablation reference);
           * "whole"        — whole-image convolution, no patching (the
-            lossless software reference; ``width`` optional).
+            lossless software reference; ``width`` optional). Always fp32,
+            even on a quantized engine — it is the baseline the quant
+            accuracy budget is measured against.
 
         ``plan`` overrides the engine's plan for this call only (benchmark
         sweeps over the patch-based modes; "whole" has no plan knobs).
@@ -226,6 +312,13 @@ class SREngine:
         if mode != "edge_select" and ids_override is not None:
             raise ValueError("ids_override requires mode='edge_select'")
         p = plan if plan is not None else self.plan
+        if p.quant != self.plan.quant:
+            # quant is engine state (calibrated alphas + compiled lattice
+            # executables), exactly like backend/shards
+            raise ValueError(
+                f"plan.quant is engine-level: engine was built with "
+                f"{self.plan.quant!r}, per-call plan asks for {p.quant!r}; "
+                f"construct a second engine for a different quant mode")
         t0 = time.perf_counter()
 
         widths = self.cfg.subnet_widths()
@@ -253,7 +346,7 @@ class SREngine:
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
                                         interpret=p.interpret, geometry=geom,
-                                        mesh=self.mesh)
+                                        mesh=self.mesh, quant=self.qpack)
         elif ids_override is None and p.subnet_policy != "threshold":
             # forced policies ignore edge scores — reuse the no-scoring path;
             # plan.decide is the single policy-name -> subnet-id mapping.
@@ -265,7 +358,7 @@ class SREngine:
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
                                         interpret=p.interpret, geometry=geom,
-                                        mesh=self.mesh)
+                                        mesh=self.mesh, quant=self.qpack)
         else:
             # an explicit ids_override skips the edge unit entirely, so there
             # are no scores to report for that path
@@ -277,7 +370,7 @@ class SREngine:
                                     ids_override=ids_override,
                                     buckets=p.buckets, backend=self.backend,
                                     interpret=p.interpret, geometry=geom,
-                                    mesh=self.mesh)
+                                    mesh=self.mesh, quant=self.qpack)
         res.image.block_until_ready()
         return FrameResult(image=res.image, mode=result_mode,
                            backend=self._backend_label(p), ids=res.ids,
@@ -332,7 +425,7 @@ class SREngine:
                                 ids_override=ids, buckets=self.plan.buckets,
                                 backend=self.backend,
                                 interpret=self.plan.interpret, geometry=geom,
-                                mesh=self.mesh,
+                                mesh=self.mesh, quant=self.qpack,
                                 precomputed=(patches, pos, scores))
         res.image.block_until_ready()
         dt = time.perf_counter() - t0

@@ -22,12 +22,21 @@ import numpy as np
 from repro.core import subnet_policy as sp
 from repro.core.patching import PatchGeometry, get_geometry
 from repro.core.pipeline import DEFAULT_BUCKETS
+from repro.quant.pams import QUANT_MODES as pams_quant_modes
 
 #: Subnet-policy names accepted by :class:`ExecutionPlan`.
 #: ``threshold``     — paper Sec. II-C routing on the (t1, t2) edge thresholds
 #: ``all_bilinear``  / ``all_c27`` / ``all_c54`` — force every patch through
 #:                     one subnet (the ablation references of Tables III/IX).
 SUBNET_POLICIES = ("threshold", "all_bilinear", "all_c27", "all_c54")
+
+#: Serving quantization modes accepted by :class:`ExecutionPlan`:
+#: ``None``    — fp32 serving (the default)
+#: ``"fxp10"`` — the paper's whole-model FXP10 (Sec. IV-H)
+#: ``"int8"``  — TPU-native int8 (the MXU integer datapath)
+#: Derived from `repro.quant.pams.QUANT_MODES` (the mode -> bits mapping),
+#: the single source of truth for which lattices exist.
+QUANT_MODES = (None, *pams_quant_modes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +51,14 @@ class ExecutionPlan:
     #: CPU-correctness fallback); True/False force it. Only consulted by the
     #: "pallas" backend.
     interpret: Optional[bool] = None
+    #: Serving quantization: None (fp32), "fxp10" (paper Sec. IV-H) or
+    #: "int8" (TPU MXU datapath). Engine-level like ``shards``: the engine
+    #: PTQ-calibrates per-subnet activation alphas at construction, so a
+    #: per-call plan override cannot change the mode. The "ref" backend
+    #: serves fake-quant emulation; "pallas" serves the integer-domain
+    #: kernel stack (kernels/qconv.py). Surfaced as a FrameResult.backend
+    #: suffix ("ref-fxp10", "pallas-int8", "pallas-interpret-int8", ...).
+    quant: Optional[str] = None
     #: Data-parallel patch-stream shards. 1 = the single-device path. > 1
     #: splits each frame's routed patch buckets across that many devices
     #: (shard_map over a 1-D mesh) and gives each shard its own Algorithm-1
@@ -67,6 +84,9 @@ class ExecutionPlan:
         if self.interpret not in (None, True, False):
             raise ValueError(f"interpret must be None/True/False, "
                              f"got {self.interpret!r}")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(f"quant must be one of {QUANT_MODES}, "
+                             f"got {self.quant!r}")
         if not isinstance(self.shards, int) or self.shards < 1:
             raise ValueError(f"shards must be a positive int, "
                              f"got {self.shards!r}")

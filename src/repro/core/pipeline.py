@@ -17,6 +17,15 @@ Two execution styles:
 (fused kernel groups); ``interpret`` (None/True/False) selects compiled vs
 interpreter Pallas — None auto-compiles on TPU/GPU and falls back to the
 interpreter on CPU (see repro.kernels.dispatch).
+
+``quant`` (a `repro.quant.pams.QuantPack`, or None for fp32) swaps the
+per-subnet forward for the quantized serving path: PAMS fake-quant emulation
+on the "ref" backend, the integer-domain kernel stack (`kernels/qconv.py`:
+integer codes between fused groups, int32-accumulate matmuls,
+requantize-on-output) on the "pallas" backend. Routing, patch geometry and
+fusion are untouched — edge scores are computed on the fp input frame, so a
+quant mode can never shift the C54/C27/bilinear routing decision. Bilinear
+patches (width 0) bypass the conv lattice entirely, exactly as on the ASIC.
 """
 from __future__ import annotations
 
@@ -81,22 +90,71 @@ def resolve_backend(name: str):
 
 
 # ---------------------------------------------------------------------------
+# quantized per-subnet forwards (ExecutionPlan.quant = "fxp10" | "int8")
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "width", "quant"))
+def _forward_width_quant_ref_jit(params, patches, cfg: ESSRConfig, width: int,
+                                 quant):
+    from repro.quant.pams import quantized_essr_forward
+    if width == 0:
+        from repro.models.layers import bilinear_resize
+        return bilinear_resize(patches, cfg.scale)
+    scales = {k: jnp.asarray(v, jnp.float32)
+              for k, v in quant.act_scales(width).items()}
+    return quantized_essr_forward(params, scales, patches, cfg, quant.qcfg,
+                                  width=width)
+
+
+def _forward_width_quant_ref(params, patches, cfg: ESSRConfig, width: int,
+                             interpret: Optional[bool] = None, *, quant):
+    """PAMS fake-quant emulation of the whole forward (W/A quantized at every
+    conv boundary with the pack's PTQ alphas) — the "ref" quant backend."""
+    return _forward_width_quant_ref_jit(params, patches, cfg, width, quant)
+
+
+def _forward_width_quant_pallas(params, patches, cfg: ESSRConfig, width: int,
+                                interpret: Optional[bool] = None, *, quant):
+    """Integer-domain quantized kernel stack — the "pallas" quant backend."""
+    from repro.kernels.qconv import essr_forward_qkernels
+    if width == 0:
+        from repro.models.layers import bilinear_resize
+        return bilinear_resize(patches, cfg.scale)
+    return essr_forward_qkernels(params, patches, cfg, width=width,
+                                 pack=quant, interpret=interpret)
+
+
+QUANT_BACKENDS = {"ref": _forward_width_quant_ref,
+                  "pallas": _forward_width_quant_pallas}
+
+
+def resolve_forward(backend: str, quant=None):
+    """(backend, QuantPack-or-None) -> the per-subnet forward callable with
+    the uniform ``(params, patches, cfg, width, interpret=)`` signature."""
+    resolve_backend(backend)            # single source of name validation
+    if quant is None:
+        return BACKENDS[backend]
+    return functools.partial(QUANT_BACKENDS[backend], quant=quant)
+
+
+# ---------------------------------------------------------------------------
 # data-parallel per-subnet forward (the sharded patch stream)
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=64)
 def _sharded_forward_fn(backend: str, mesh, cfg: ESSRConfig, width: int,
-                        interpret: Optional[bool]):
+                        interpret: Optional[bool], quant=None):
     """jit(shard_map(forward)) splitting the patch batch over ``mesh``'s single
-    axis, params replicated. Cached per (backend, mesh, cfg, width, interpret)
-    so the shard_map callable (and its compiled executable) is built once per
-    routing regime. ``check_rep=False``: pallas_call has no replication rule,
-    and the batch axis carries no collectives anyway."""
+    axis, params replicated. Cached per (backend, mesh, cfg, width, interpret,
+    quant) so the shard_map callable (and its compiled executable) is built
+    once per routing regime (`QuantPack` is frozen/hashable for exactly this).
+    ``check_rep=False``: pallas_call has no replication rule, and the batch
+    axis carries no collectives anyway."""
     from repro.distributed.sharding import patch_batch_spec
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    forward = resolve_backend(backend)
+    forward = resolve_forward(backend, quant)
     spec = patch_batch_spec(mesh)
 
     def local(params, patches):
@@ -108,7 +166,8 @@ def _sharded_forward_fn(backend: str, mesh, cfg: ESSRConfig, width: int,
 
 def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
                     *, mesh, backend: str = "ref",
-                    interpret: Optional[bool] = None) -> jax.Array:
+                    interpret: Optional[bool] = None,
+                    quant=None) -> jax.Array:
     """Run one subnet's patch batch data-parallel across ``mesh`` devices.
 
     Pads the batch up to a multiple of the mesh size by repeating the last
@@ -120,7 +179,7 @@ def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
     if pad:
         patches = jnp.concatenate(
             [patches, jnp.repeat(patches[-1:], pad, axis=0)], axis=0)
-    out = _sharded_forward_fn(backend, mesh, cfg, width, interpret)(
+    out = _sharded_forward_fn(backend, mesh, cfg, width, interpret, quant)(
         params, patches)
     return out[:n] if pad else out
 
@@ -145,6 +204,7 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
                       precomputed: Optional[Tuple[jax.Array, np.ndarray,
                                                   np.ndarray]] = None,
                       mesh=None,
+                      quant=None,
                       use_loop_reference: bool = False) -> SRResult:
     """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image.
 
@@ -162,16 +222,21 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
     already extracted/scored this frame (the streaming path scores patches
     for the adaptive switcher) — avoids doing that work twice per frame.
 
+    ``quant``: optional `repro.quant.pams.QuantPack` — serve this frame
+    through the quantized forward of the chosen backend (see module
+    docstring). Edge scoring/routing stay fp either way.
+
     ``use_loop_reference``: run the seed per-patch extract/fuse loops instead
     of the vectorized gather/scatter — the equivalence oracle for tests and
     the "before" side of benchmarks/table11_throughput.py. Never the serving
     path.
     """
-    forward = resolve_backend(backend)
+    forward = resolve_forward(backend, quant)
     if mesh is not None and int(mesh.size) > 1:
         def forward(params, patches, cfg, width, interpret=None):
             return sharded_forward(params, patches, cfg, width, mesh=mesh,
-                                   backend=backend, interpret=interpret)
+                                   backend=backend, interpret=interpret,
+                                   quant=quant)
     s = cfg.scale
     h, w = int(frame.shape[0]), int(frame.shape[1])
     g = geometry if geometry is not None else get_geometry(h, w, patch,
@@ -229,7 +294,7 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
                           backend: str = "ref",
                           interpret: Optional[bool] = None,
                           geometry: Optional[PatchGeometry] = None,
-                          mesh=None) -> SRResult:
+                          mesh=None, quant=None) -> SRResult:
     """Every patch through one subnet (the non-edge-selective reference).
 
     The single implementation of forced routing — the edge-score pass is
@@ -244,6 +309,7 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
     return edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
                              ids_override=ids, buckets=buckets, backend=backend,
                              interpret=interpret, geometry=g, mesh=mesh,
+                             quant=quant,
                              precomputed=(patches, pos,
                                           np.zeros(len(pos), np.float32)))
 

@@ -8,6 +8,10 @@ groups exactly as the GLNPU schedules them (Figs. 10-12, 15):
 ``block_patches`` doubles for the C27 subnet at equal VMEM budget — the
 "configurable group of layer mapping" (C27 moves 2x the patches per grid
 step through the same kernels, mirroring 4x 1x1 + 2x 3x3 concurrent PE use).
+
+The quantized serving path (`ExecutionPlan.quant`) has its own fused chain,
+``essr_forward_qkernels`` (kernels/qconv.py): same group structure on the
+PAMS integer lattice.
 """
 from __future__ import annotations
 
@@ -20,6 +24,9 @@ from repro.kernels.bsconv import bsconv_fused
 from repro.kernels.dispatch import default_interpret, pad_batch, resolve_interpret
 from repro.kernels.dsconv import dsconv_fused
 from repro.kernels.edge import edge_score_fused
+from repro.kernels.qconv import (essr_forward_qkernels, essr_forward_qref,
+                                 qbsconv_fused, qdsconv_fused, qsfb_fused,
+                                 quantize_fused)
 from repro.kernels.sfb import sfb_fused
 from repro.models.essr import ESSRConfig, slice_width
 from repro.models.layers import pixel_shuffle
@@ -74,4 +81,6 @@ def essr_forward_kernels(params, x, cfg: ESSRConfig, width: Optional[int] = None
 
 __all__ = ["bsconv_fused", "dsconv_fused", "sfb_fused", "edge_score_fused",
            "essr_forward_kernels", "default_block_patches",
-           "default_interpret", "resolve_interpret"]
+           "default_interpret", "resolve_interpret",
+           "quantize_fused", "qbsconv_fused", "qsfb_fused", "qdsconv_fused",
+           "essr_forward_qkernels", "essr_forward_qref"]

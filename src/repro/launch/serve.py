@@ -3,7 +3,8 @@
 Streams synthetic frames through ``SREngine.stream`` (edge scores ->
 Algorithm-1 adaptive thresholds -> per-subnet batched ESSR -> overlap+average
 fusion) and prints the Table-XI-style summary (subnet shares, MAC saving,
-latency).
+latency). ``--quant fxp10|int8`` serves the PAMS quantized datapath instead
+of fp32 (see docs/api.md "Quantized serving").
 
     PYTHONPATH=src python -m repro.launch.serve --frames 4 --hw 96
 """
@@ -29,6 +30,11 @@ def main():
                     help="data-parallel patch-stream shards (each gets its "
                          "own Algorithm-1 controller; dispatch uses up to "
                          "this many devices, degrading to one transparently)")
+    ap.add_argument("--quant", default="none",
+                    choices=("none", "fxp10", "int8"),
+                    help="PAMS quantized serving: fxp10 (paper Sec. IV-H) or "
+                         "int8 (TPU MXU datapath); alphas PTQ-calibrate at "
+                         "engine construction")
     args = ap.parse_args()
 
     from repro.api import ExecutionPlan, SREngine
@@ -44,8 +50,10 @@ def main():
                          frame_low=max(1, int(n_patches * 0.30)))
     engine = SREngine.from_checkpoint(
         args.ckpt, cfg=ESSRConfig(scale=args.scale), backend=args.backend,
-        plan=ExecutionPlan(shards=args.shards),
+        plan=ExecutionPlan(shards=args.shards,
+                           quant=None if args.quant == "none" else args.quant),
         switching=sw, deadline_s=args.deadline_ms / 1e3 or None, verbose=True)
+    print(f"serving backend: {engine.backend_label}")
 
     def frames():
         for i in range(args.frames):

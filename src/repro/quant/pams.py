@@ -9,18 +9,32 @@ Two target modes:
   * ``bits=8`` : TPU-native int8 (the MXU has an int8 datapath; DESIGN.md §3).
 
 Provides fake-quant training ops, PTQ calibration (percentile), a quantized
-ESSR forward, and an integer-consistency check used by tests.
+ESSR forward, an integer-consistency check used by tests, and the frozen
+`QuantPack` that carries PTQ-calibrated per-subnet activation alphas through
+the serving path (`ExecutionPlan.quant` -> `SREngine` -> `core/pipeline`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import hashlib
+import json
+from typing import Dict, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.essr import ESSRConfig, slice_width
+
+#: Serving quant modes (`ExecutionPlan.quant`) -> bit width.
+#: "fxp10" is the paper-faithful whole-model FXP10; "int8" is the TPU-native
+#: MXU datapath.
+QUANT_MODES: Dict[str, int] = {"fxp10": 10, "int8": 8}
+
+#: Quantization-step floor: alphas below ``qmax * EPS`` collapse every code
+#: to 0 instead of dividing by a mismatched epsilon (see ``quantize``).
+EPS = 1e-12
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,19 +48,31 @@ class QuantConfig:
         return 2 ** (self.bits - 1) - 1
 
 
+def step_size(alpha, qmax: int):
+    """The quantization step actually used by ``quantize``/``int_codes``.
+
+    The epsilon floor applies to the step used on BOTH the divide and the
+    multiply side, so degenerate alphas (alpha -> 0) stay idempotent: the old
+    form divided by ``max(s, eps)`` but multiplied back by ``s``, which made
+    ``quantize`` non-idempotent (and dequant inconsistent with the codes)
+    whenever ``alpha < qmax * eps``."""
+    return jnp.maximum(alpha / qmax, EPS)
+
+
 def quantize(x: jax.Array, alpha: jax.Array, qmax: int) -> jax.Array:
     """Fake-quant with STE: forward = dequant(round(clip(x)/s)), grad = identity
     inside the clip range (PAMS' straight-through rule)."""
-    s = alpha / qmax
+    s = step_size(alpha, qmax)
     xc = jnp.clip(x, -alpha, alpha)
-    q = jnp.round(xc / jnp.maximum(s, 1e-12)) * s
+    q = jnp.round(xc / s) * s
     return xc + jax.lax.stop_gradient(q - xc)
 
 
 def int_codes(x: jax.Array, alpha: jax.Array, qmax: int) -> jax.Array:
-    """The integer lattice codes (for the integer-consistency test)."""
-    s = alpha / qmax
-    return jnp.round(jnp.clip(x, -alpha, alpha) / jnp.maximum(s, 1e-12)).astype(jnp.int32)
+    """The integer lattice codes (the integer-consistency oracle: the Pallas
+    qconv kernels must reproduce these bit-exactly)."""
+    return jnp.round(jnp.clip(x, -alpha, alpha)
+                     / step_size(alpha, qmax)).astype(jnp.int32)
 
 
 def weight_alpha(w: jax.Array, per_channel: bool) -> jax.Array:
@@ -82,6 +108,15 @@ def init_act_scales(cfg: ESSRConfig, init: float = 2.0) -> Dict[str, jax.Array]:
     return {k: jnp.asarray(init, jnp.float32) for k in _act_points(cfg)}
 
 
+def effective_alpha(alpha):
+    """Stored/learned alpha -> the clip range the forward actually uses.
+
+    Single source of truth shared by the fake-quant forward and the
+    integer-domain kernel stack (kernels/qconv.py), so both paths clip and
+    step identically."""
+    return jnp.abs(alpha) + 1e-8
+
+
 def quantized_essr_forward(params, act_scales: Dict[str, jax.Array], x: jax.Array,
                            cfg: ESSRConfig, qcfg: QuantConfig = QuantConfig(),
                            width: Optional[int] = None) -> jax.Array:
@@ -92,7 +127,7 @@ def quantized_essr_forward(params, act_scales: Dict[str, jax.Array], x: jax.Arra
     if width is not None and width != cfg.channels:
         params = slice_width(params, width)
     params = quantize_weight_tree(params, qcfg)
-    qa = lambda name, t: quantize(t, jnp.abs(act_scales[name]) + 1e-8, qcfg.qmax)
+    qa = lambda name, t: quantize(t, effective_alpha(act_scales[name]), qcfg.qmax)
 
     f = qa("in", x)
     f = qa("first", L.bsconv(params["first"], f))
@@ -106,13 +141,24 @@ def quantized_essr_forward(params, act_scales: Dict[str, jax.Array], x: jax.Arra
 
 
 def calibrate_act_scales(params, cfg: ESSRConfig, sample: jax.Array,
-                         qcfg: QuantConfig = QuantConfig()) -> Dict[str, jax.Array]:
-    """PTQ: run fp forward on a calibration batch, set alpha = percentile(|act|)."""
+                         qcfg: QuantConfig = QuantConfig(),
+                         n_valid: Optional[int] = None) -> Dict[str, jax.Array]:
+    """PTQ: run fp forward on a calibration batch, set alpha = percentile(|act|).
+
+    ``n_valid``: number of REAL patches at the front of ``sample``. The patch
+    pipeline pads routed buckets by repeating the bucket's last patch; feeding
+    such a padded batch here would weight the repeated patch's activations
+    ``pad + 1`` times in the percentile and bias the alphas toward whatever
+    content happened to sit last. The percentile is therefore computed over
+    ``sample[:n_valid]`` only (``None`` = the whole batch is real)."""
     scales: Dict[str, jax.Array] = {}
     pct = qcfg.act_percentile
+    nv = sample.shape[0] if n_valid is None else int(n_valid)
+    if not 0 < nv <= sample.shape[0]:
+        raise ValueError(f"n_valid {n_valid} must be in 1..{sample.shape[0]}")
 
     def rec(name, t):
-        scales[name] = jnp.percentile(jnp.abs(t), pct) + 1e-8
+        scales[name] = jnp.percentile(jnp.abs(t[:nv]), pct) + 1e-8
         return t
 
     f = rec("in", sample)
@@ -124,3 +170,139 @@ def calibrate_act_scales(params, cfg: ESSRConfig, sample: jax.Array,
         f = rec(f"sfb{i}_out", jax.nn.relu(y))
     rec("recon", L.dsconv(params["recon"], f))
     return scales
+
+
+# ---------------------------------------------------------------------------
+# serving-path quantization state: per-subnet alphas, frozen + hashable
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantPack:
+    """Everything the serving path needs to run one quant mode, frozen and
+    hashable so it rides through ``jax.jit``/``shard_map`` as a static
+    argument (one compiled executable per (mode, calibration) regime).
+
+    ``scales``: per-subnet activation alphas keyed by the conv routing
+    buckets — ``((width, ((site, alpha), ...)), ...)`` for every conv width
+    of the supernet (the bilinear width-0 bucket never touches the conv
+    lattice and needs no alphas). Alphas are plain floats: hashability, and
+    exact round-trips through the JSON cache."""
+    mode: str                   # "fxp10" | "int8"
+    bits: int
+    per_channel_weights: bool
+    act_percentile: float
+    scales: Tuple[Tuple[int, Tuple[Tuple[str, float], ...]], ...]
+
+    def __post_init__(self):
+        if self.mode not in QUANT_MODES:
+            raise ValueError(f"quant mode {self.mode!r} not in "
+                             f"{sorted(QUANT_MODES)}")
+
+    @property
+    def qcfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.bits,
+                           per_channel_weights=self.per_channel_weights,
+                           act_percentile=self.act_percentile)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    def widths(self) -> Tuple[int, ...]:
+        return tuple(w for w, _ in self.scales)
+
+    def act_scales(self, width: int) -> Dict[str, float]:
+        for w, sites in self.scales:
+            if w == width:
+                return dict(sites)
+        raise KeyError(f"no calibrated alphas for width {width} "
+                       f"(have {self.widths()})")
+
+
+def code_dtype(bits: int):
+    """Storage dtype of the integer lattice codes: int8 is the MXU-native
+    datapath; FXP10 codes (±511) need the wider int32."""
+    return jnp.int8 if bits <= 8 else jnp.int32
+
+
+def calibrate_subnet_scales(params, cfg: ESSRConfig, sample: jax.Array,
+                            qcfg: QuantConfig = QuantConfig(),
+                            n_valid: Optional[int] = None
+                            ) -> Dict[int, Dict[str, float]]:
+    """PTQ alphas for EVERY conv subnet of the supernet (C54 and C27 see
+    different activation ranges through the shared weights, so each routing
+    bucket gets its own alpha set)."""
+    out: Dict[int, Dict[str, float]] = {}
+    for w in cfg.subnet_widths():
+        if w == 0:
+            continue                      # bilinear: no conv, no lattice
+        p = params if w == cfg.channels else slice_width(params, w)
+        scales = calibrate_act_scales(p, cfg, sample, qcfg, n_valid=n_valid)
+        out[w] = {k: float(v) for k, v in scales.items()}
+    return out
+
+
+def build_quant_pack(params, cfg: ESSRConfig, mode: str, sample: jax.Array,
+                     *, per_channel_weights: bool = True,
+                     act_percentile: float = 99.9,
+                     n_valid: Optional[int] = None) -> QuantPack:
+    """Calibrate a serving `QuantPack` from a calibration batch (PTQ)."""
+    if mode not in QUANT_MODES:
+        raise ValueError(f"quant mode {mode!r} not in {sorted(QUANT_MODES)}")
+    qcfg = QuantConfig(bits=QUANT_MODES[mode],
+                       per_channel_weights=per_channel_weights,
+                       act_percentile=act_percentile)
+    by_width = calibrate_subnet_scales(params, cfg, sample, qcfg,
+                                       n_valid=n_valid)
+    scales = tuple((w, tuple(sorted(by_width[w].items())))
+                   for w in sorted(by_width))
+    return QuantPack(mode=mode, bits=qcfg.bits,
+                     per_channel_weights=per_channel_weights,
+                     act_percentile=act_percentile, scales=scales)
+
+
+# ---------------------------------------------------------------------------
+# alpha cache (alongside the bench-model cache): calibration is a full fp
+# forward per subnet, so repeated engine constructions reuse the JSON record
+# ---------------------------------------------------------------------------
+
+def params_fingerprint(params) -> str:
+    """Short stable fingerprint of a param tree (content hash of the leaf
+    bytes) — keys the alpha cache so stale alphas never serve new weights."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def save_quant_pack(path: str, pack: QuantPack, fingerprint: str) -> None:
+    payload = {
+        "mode": pack.mode, "bits": pack.bits,
+        "per_channel_weights": pack.per_channel_weights,
+        "act_percentile": pack.act_percentile,
+        "fingerprint": fingerprint,
+        "scales": {str(w): dict(sites) for w, sites in pack.scales},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
+def load_quant_pack(path: str, fingerprint: str) -> Optional[QuantPack]:
+    """Load a cached pack; None when missing, unreadable, or calibrated for
+    different weights (the fingerprint mismatch case)."""
+    try:
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("fingerprint") != fingerprint:
+            return None
+        scales = tuple((int(w), tuple(sorted(
+            (str(k), float(v)) for k, v in sites.items())))
+            for w, sites in sorted(d["scales"].items(),
+                                   key=lambda kv: int(kv[0])))
+        return QuantPack(mode=d["mode"], bits=int(d["bits"]),
+                         per_channel_weights=bool(d["per_channel_weights"]),
+                         act_percentile=float(d["act_percentile"]),
+                         scales=scales)
+    except (OSError, ValueError, KeyError, TypeError):
+        return None

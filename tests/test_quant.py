@@ -2,12 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.essr import ESSR_X4, ESSRConfig, essr_forward, init_essr
-from repro.quant.pams import (QuantConfig, calibrate_act_scales, int_codes,
+from repro.quant.pams import (QuantConfig, QuantPack, build_quant_pack,
+                              calibrate_act_scales, calibrate_subnet_scales,
+                              int_codes, load_quant_pack, params_fingerprint,
                               quantize, quantized_essr_forward,
-                              quantize_weight_tree)
+                              quantize_weight_tree, save_quant_pack)
 
 @settings(max_examples=30, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 10]))
@@ -66,3 +69,135 @@ def test_weight_quant_skips_biases():
     np.testing.assert_array_equal(np.asarray(qp["first"]["pw_b"]),
                                   np.asarray(p["first"]["pw_b"]))
     assert not np.allclose(np.asarray(qp["first"]["pw"]), np.asarray(p["first"]["pw"]))
+
+
+# ---------------------------------------------------------------------------
+# quantize / int_codes invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 10]),
+       st.floats(1e-3, 8.0))
+def test_fake_quant_idempotent(seed, bits, alpha):
+    """quantize is a projection onto the lattice: applying it twice changes
+    nothing (requires the divide and the dequant to use the SAME step)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 3
+    a = jnp.asarray(alpha, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    q1 = quantize(x, a, qmax)
+    q2 = quantize(q1, a, qmax)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 10]),
+       st.floats(1e-3, 8.0))
+def test_quant_symmetry(seed, bits, alpha):
+    """Symmetric quantizer: negating the input negates codes and dequant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 3
+    a = jnp.asarray(alpha, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    np.testing.assert_array_equal(np.asarray(quantize(-x, a, qmax)),
+                                  np.asarray(-quantize(x, a, qmax)))
+    np.testing.assert_array_equal(np.asarray(int_codes(-x, a, qmax)),
+                                  np.asarray(-int_codes(x, a, qmax)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 10]),
+       st.floats(1e-30, 8.0))
+def test_qmax_saturation(seed, bits, alpha):
+    """Codes never leave [-qmax, qmax] and dequant never leaves
+    [-alpha, alpha], however extreme the inputs or tiny the alpha."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 100
+    a = jnp.asarray(alpha, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    codes = np.asarray(int_codes(x, a, qmax))
+    assert np.abs(codes).max() <= qmax
+    q = np.asarray(quantize(x, a, qmax))
+    # the relative term covers scale-rounding at normal alphas, the absolute
+    # term the epsilon-floored step (alpha below qmax*1e-12 quantizes on a
+    # coarser-than-alpha lattice by design)
+    assert np.abs(q).max() <= float(a) * (1 + 1e-6) + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([8, 10]),
+       st.floats(0.0, 1e-10))
+def test_alpha_to_zero_collapses_to_zero(bits, alpha):
+    """alpha -> 0 degenerates gracefully: once the true step underflows the
+    epsilon floor, everything clips into a vanishing range and both codes
+    and dequant collapse to exactly 0 — the old mismatched-epsilon form
+    instead produced codes that dequantized inconsistently."""
+    x = jnp.asarray([-2.0, -1e-11, 0.0, 1e-11, 2.0], jnp.float32)
+    a = jnp.asarray(alpha, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    q = quantize(x, a, qmax)
+    codes = int_codes(x, a, qmax)
+    assert np.abs(np.asarray(codes)).max() <= qmax
+    # still idempotent and consistent: dequant(codes) == fake-quant value
+    np.testing.assert_array_equal(np.asarray(quantize(q, a, qmax)),
+                                  np.asarray(q))
+    # codes and step agree: dequant reproduces codes * step exactly
+    step = max(float(a) / qmax, 1e-12)
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(codes, np.float32) * np.float32(step))
+    if alpha < 0.5e-12:
+        # everything clips under half the floored step -> exactly zero
+        np.testing.assert_array_equal(np.asarray(codes), 0)
+        np.testing.assert_array_equal(np.asarray(q), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# PTQ calibration: padded patches must not bias the percentile
+# ---------------------------------------------------------------------------
+
+def test_calibration_ignores_padded_patches():
+    """Bucket padding repeats the LAST patch; feeding such a batch to the
+    percentile without masking weights that patch's activations pad+1 times.
+    With ``n_valid`` the padded batch calibrates exactly like the clean one."""
+    cfg = ESSRConfig(scale=2, channels=8, n_sfb=2)
+    p = init_essr(jax.random.PRNGKey(0), cfg)
+    clean = jax.random.uniform(jax.random.PRNGKey(1), (6, 12, 12, 3))
+    # an outlier-heavy last patch, then bucket-style padding that repeats it
+    clean = clean.at[-1].set(clean[-1] * 5.0)
+    padded = jnp.concatenate([clean, jnp.repeat(clean[-1:], 10, axis=0)])
+
+    want = calibrate_act_scales(p, cfg, clean, QuantConfig())
+    got = calibrate_act_scales(p, cfg, padded, QuantConfig(), n_valid=6)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-6)
+    # and without the mask the repeated outlier really does bias the alphas
+    biased = calibrate_act_scales(p, cfg, padded, QuantConfig())
+    assert any(float(biased[k]) > float(want[k]) * 1.05 for k in want)
+    with pytest.raises(ValueError):
+        calibrate_act_scales(p, cfg, padded, QuantConfig(), n_valid=0)
+
+
+def test_subnet_scales_cover_conv_widths():
+    cfg = ESSRConfig(scale=2, channels=8, n_sfb=2)
+    p = init_essr(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 12, 12, 3))
+    by_width = calibrate_subnet_scales(p, cfg, x)
+    assert sorted(by_width) == [4, 8]             # bilinear (0) excluded
+    # C27-vs-C54 activations genuinely differ through the shared weights
+    assert by_width[4] != by_width[8]
+
+
+def test_quant_pack_roundtrip_and_fingerprint(tmp_path):
+    cfg = ESSRConfig(scale=2, channels=8, n_sfb=2)
+    p = init_essr(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 12, 12, 3))
+    pack = build_quant_pack(p, cfg, "int8", x)
+    fp = params_fingerprint(p)
+    path = str(tmp_path / "alphas.json")
+    save_quant_pack(path, pack, fp)
+    loaded = load_quant_pack(path, fp)
+    assert loaded == pack                         # exact, hash-stable
+    assert isinstance(loaded, QuantPack) and hash(loaded) == hash(pack)
+    # alphas calibrated for other weights never load
+    other = params_fingerprint(init_essr(jax.random.PRNGKey(9), cfg))
+    assert other != fp
+    assert load_quant_pack(path, other) is None
+    assert load_quant_pack(str(tmp_path / "missing.json"), fp) is None

@@ -1,0 +1,284 @@
+"""Quantized-serving conformance harness (paper Sec. IV-H; ISSUE 4).
+
+Three contracts, in increasing altitude:
+
+  1. **Integer consistency** — the codes the Pallas qconv kernels produce
+     are bit-exact vs `quant.pams.int_codes` (the quantizer) and vs the
+     pure-jnp integer-domain reference `essr_forward_qref` (the whole
+     chain). Both sides run jit'd: XLA's fp contraction must be decided
+     identically or a 1-ulp excess-precision difference can flip a code on
+     a .5 rounding boundary.
+  2. **Fake-quant vs integer-domain** — per fused group, the dequantized
+     kernel output is allclose to the fake-quant emulation of the same
+     layers within a few quantization steps (fp summation order differs,
+     lattices do not).
+  3. **Accuracy budget** — on the synthetic frame suite a quantized engine
+     stays within the paper's 0.6 dB of the fp32 engine, for the ref and
+     pallas backends, sharded and unsharded.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExecutionPlan, SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.kernels.qconv import (act_qconsts, essr_forward_qkernels,
+                                 essr_forward_qref, prepare_qparams,
+                                 qbsconv_fused, quantize_fused)
+from repro.models.essr import ESSRConfig, init_essr
+from repro.quant.pams import (build_quant_pack, code_dtype, effective_alpha,
+                              int_codes, quantized_essr_forward)
+from repro.train.losses import psnr_y
+
+MULTI = jax.device_count() >= 2
+needs_devices = pytest.mark.skipif(
+    not MULTI, reason="needs >= 2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+CFG = ESSRConfig(scale=2, channels=8, n_sfb=2)
+
+
+def _params_and_batch(n=5, hw=12, seed=0):
+    params = init_essr(jax.random.PRNGKey(seed), CFG)
+    x = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n, hw, hw, 3))
+    return params, x
+
+
+# ---------------------------------------------------------------------------
+# 1. integer consistency: kernel codes == int_codes / qref, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["int8", "fxp10"])
+def test_quantize_fused_bitexact_vs_int_codes(mode):
+    """The Pallas quantizer must land on exactly the `int_codes` lattice."""
+    params, x = _params_and_batch()
+    pack = build_quant_pack(params, CFG, mode, x)
+    raw = pack.act_scales(CFG.channels)["in"]
+    a, s = act_qconsts(raw, pack.qmax)
+    got = quantize_fused(x, a=a, s=s, bits=pack.bits, interpret=True)
+    want = int_codes(x, effective_alpha(jnp.float32(raw)), pack.qmax)
+    assert got.dtype == code_dtype(pack.bits)
+    np.testing.assert_array_equal(np.asarray(got, np.int32), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", ["int8", "fxp10"])
+@pytest.mark.parametrize("width", [4, 8])
+def test_qkernel_chain_bitexact_vs_integer_reference(mode, width):
+    """Whole kernel chain vs the jnp integer-domain spec: bit-exact, for
+    both subnet widths and both lattice dtypes (int8 / int32)."""
+    params, x = _params_and_batch()
+    pack = build_quant_pack(params, CFG, mode, x)
+    ref = essr_forward_qref(params, x, CFG, width, pack=pack)
+    ker = essr_forward_qkernels(params, x, CFG, width, pack=pack,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+def test_qkernels_serve_per_tensor_weight_quant():
+    """per_channel_weights=False (per-tensor weight alphas) must serve on
+    the integer path too: the 0-d weight step broadcasts to the channel
+    shape instead of crashing the scale folding."""
+    params, x = _params_and_batch()
+    pack = build_quant_pack(params, CFG, "int8", x,
+                            per_channel_weights=False)
+    ref = essr_forward_qref(params, x, CFG, 8, pack=pack)
+    ker = essr_forward_qkernels(params, x, CFG, 8, pack=pack, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+def test_qkernel_bitexact_survives_odd_batches():
+    """Prime batch sizes exercise the pad/re-slice path of every kernel."""
+    params, _ = _params_and_batch()
+    x = jax.random.uniform(jax.random.PRNGKey(7), (7, 12, 12, 3))
+    pack = build_quant_pack(params, CFG, "int8", x)
+    ref = essr_forward_qref(params, x, CFG, 8, pack=pack)
+    ker = essr_forward_qkernels(params, x, CFG, 8, pack=pack, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# 2. fake-quant vs integer-domain, per fused group and whole model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["int8", "fxp10"])
+def test_qbsconv_group_allclose_vs_fakequant(mode):
+    """One BSConv group: integer path vs the fake-quant emulation of the
+    same layers, within a few output-lattice steps."""
+    from repro.models import layers as L
+    from repro.quant.pams import quantize, quantize_weight_tree
+    params, x = _params_and_batch()
+    pack = build_quant_pack(params, CFG, mode, x)
+    q, c = prepare_qparams(params, CFG, CFG.channels, pack)
+    raw = pack.act_scales(CFG.channels)
+
+    # integer path: quantize input -> qbsconv -> dequant at the output site
+    a, s = act_qconsts(raw["in"], pack.qmax)
+    xq = quantize_fused(x, a=a, s=s, bits=pack.bits, interpret=True)
+    got = qbsconv_fused(xq, q["first"]["pwq"], q["first"]["pw_scale"],
+                        q["first"]["pwb"], q["first"]["dw_fq"],
+                        q["first"]["dwb"], relu=False, a_out=c["a_first"],
+                        s_out=c["s_first"], interpret=True)
+    got = np.asarray(got, np.float32) * c["s_first"]
+
+    # fake-quant path: same sites, fp arithmetic throughout
+    fq_params = quantize_weight_tree(params, pack.qcfg)
+    f = quantize(x, effective_alpha(jnp.float32(raw["in"])), pack.qmax)
+    f = quantize(L.bsconv(fq_params["first"], f),
+                 effective_alpha(jnp.float32(raw["first"])), pack.qmax)
+    np.testing.assert_allclose(got, np.asarray(f), atol=3 * c["s_first"])
+
+
+@pytest.mark.parametrize("mode", ["int8", "fxp10"])
+@pytest.mark.parametrize("width", [4, 8])
+def test_whole_model_allclose_vs_fakequant(mode, width):
+    """Integer-domain forward vs `quantized_essr_forward` end to end: the
+    two serving backends of one quant mode must agree to within the
+    accumulated lattice noise (a handful of recon-site steps at the output,
+    scaled through pixel shuffle)."""
+    params, x = _params_and_batch()
+    pack = build_quant_pack(params, CFG, mode, x)
+    scales = {k: jnp.asarray(v, jnp.float32)
+              for k, v in pack.act_scales(width).items()}
+    fq = quantized_essr_forward(params, scales, x, CFG, pack.qcfg,
+                                width=width)
+    integer = essr_forward_qref(params, x, CFG, width, pack=pack)
+    _, s_recon = act_qconsts(pack.act_scales(width)["recon"], pack.qmax)
+    np.testing.assert_allclose(np.asarray(integer), np.asarray(fq),
+                               atol=8 * s_recon)
+
+
+# ---------------------------------------------------------------------------
+# 3. engine-level conformance: labels, routing, PSNR budget, sharding
+# ---------------------------------------------------------------------------
+
+def _frames(n=2, hw=96, scale=2):
+    hrs = [jnp.asarray(random_image(300 + i, hw, hw)) for i in range(n)]
+    return [(hr, degrade(hr, scale)) for hr in hrs]
+
+
+def test_engine_backend_labels_and_plan_guard():
+    cfg = ESSRConfig(scale=2)
+    frame = _frames(1)[0][1]
+    eng = SREngine.from_config(cfg, seed=1, plan=ExecutionPlan(quant="int8"))
+    r = eng.upscale(frame)
+    assert r.backend == "ref-int8"
+    pal = SREngine.from_config(cfg, seed=1, plan=ExecutionPlan(quant="int8"),
+                               backend="pallas")
+    assert pal.upscale(frame).backend == "pallas-interpret-int8"
+    # whole-frame reference stays fp32 (and says so)
+    assert eng.reference(frame).backend == "ref"
+    # quant is engine state: a per-call plan cannot change it
+    with pytest.raises(ValueError, match="engine-level"):
+        eng.upscale(frame, plan=eng.plan.replace(quant="fxp10"))
+    with pytest.raises(ValueError, match="quant"):
+        ExecutionPlan(quant="fp4")
+
+
+def test_engine_pallas_int8_bitexact_vs_integer_reference():
+    """Acceptance: the engine's pallas-int8 frame equals running every
+    routed bucket through the jnp integer-domain reference by hand."""
+    cfg = ESSRConfig(scale=2)
+    frame = _frames(1)[0][1]
+    plan = ExecutionPlan(quant="int8")
+    eng = SREngine.from_config(cfg, seed=1, plan=plan, backend="pallas")
+    got = eng.upscale(frame)
+
+    ref_eng = SREngine.from_config(cfg, seed=1, plan=plan, backend="ref")
+    geom = plan.geometry(frame.shape[0], frame.shape[1], cfg.scale)
+    patches = geom.extract(frame)
+    out = np.zeros((patches.shape[0], plan.patch * cfg.scale,
+                    plan.patch * cfg.scale, 3), np.float32)
+    widths = cfg.subnet_widths()
+    from repro.models.layers import bilinear_resize
+    for k, w in enumerate(widths):
+        idx = np.flatnonzero(got.ids == k)
+        if idx.size == 0:
+            continue
+        batch = jnp.take(patches, jnp.asarray(idx), axis=0)
+        if w == 0:
+            out[idx] = np.asarray(bilinear_resize(batch, cfg.scale))
+        else:
+            out[idx] = np.asarray(essr_forward_qref(
+                ref_eng.params, batch, cfg, w, pack=eng.qpack))
+    want = geom.fuse_average(jnp.asarray(out))
+    np.testing.assert_array_equal(np.asarray(got.image), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("mode", ["fxp10", "int8"])
+def test_psnr_budget_vs_fp32(backend, mode):
+    """Paper bound: whole-model quantization costs < 0.6 dB. Measured on
+    the synthetic suite against the SAME engine serving fp32 (weights are
+    bench-scale random init, so the *difference* is what the lattice costs;
+    FXP10's two extra bits must not lose to int8)."""
+    cfg = ESSRConfig(scale=2)
+    frames = _frames(2)
+    fp = SREngine.from_config(cfg, seed=1)
+    q = SREngine.from_config(cfg, seed=1, plan=ExecutionPlan(quant=mode),
+                             backend=backend)
+    drops = []
+    for hr, lr in frames:
+        p_fp = float(psnr_y(fp.upscale(lr).image, hr))
+        p_q = float(psnr_y(q.upscale(lr).image, hr))
+        drops.append(p_fp - p_q)
+    assert max(drops) < 0.6, f"quant PSNR drop {drops} exceeds 0.6 dB budget"
+
+
+@needs_devices
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_sharded_quant_matches_unsharded(backend):
+    """Acceptance: sharded and unsharded quantized serving agree (the
+    shard_map split only re-partitions the patch batch; every patch still
+    runs the identical lattice math)."""
+    cfg = ESSRConfig(scale=2)
+    frame = _frames(1)[0][1]
+    single = SREngine.from_config(cfg, seed=1, backend=backend,
+                                  plan=ExecutionPlan(quant="int8"))
+    shardN = SREngine.from_config(
+        cfg, seed=1, backend=backend,
+        plan=ExecutionPlan(quant="int8",
+                           shards=min(4, jax.device_count())))
+    r1 = single.upscale(frame)
+    rn = shardN.upscale(frame)
+    assert rn.backend.endswith("-int8")
+    np.testing.assert_allclose(np.asarray(r1.image), np.asarray(rn.image),
+                               atol=1e-6)
+    # streaming path too (per-shard controllers + quant lattice compose)
+    res = shardN.serve(frame)
+    assert len(res.shard_counts) == shardN.plan.shards
+
+
+# ---------------------------------------------------------------------------
+# golden routing: quantized serving must not move the router
+# ---------------------------------------------------------------------------
+
+#: Pinned (bilinear, C27, C54) patch counts for the fixed mixed-content
+#: frame below (smooth gradient top half, textured synthetic bottom half:
+#: all three routing buckets populated) under the default thresholds. If
+#: edge scoring or routing ever starts seeing quantized inputs, these shift
+#: and this test says so BEFORE a silent quality/throughput regression
+#: ships.
+GOLDEN_COUNTS = (10, 2, 13)
+
+
+def _golden_frame(hw: int = 128, seed: int = 1234):
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, hw), jnp.linspace(0, 1, hw),
+                          indexing="ij")
+    smooth = jnp.stack([yy, xx, (yy + xx) / 2], axis=-1)
+    tex = degrade(jnp.asarray(random_image(seed, 2 * hw, 2 * hw)), 2)
+    return jnp.where((yy < 0.5)[..., None], smooth, tex)
+
+
+def test_golden_routing_pinned_and_quant_invariant():
+    cfg = ESSRConfig(scale=2)
+    lr = _golden_frame()
+    fp = SREngine.from_config(cfg, seed=1)
+    r_fp = fp.upscale(lr)
+    assert r_fp.counts == GOLDEN_COUNTS, (
+        f"edge-score routing moved: {r_fp.counts} != pinned {GOLDEN_COUNTS}")
+    for mode in ("fxp10", "int8"):
+        r_q = SREngine.from_config(cfg, seed=1,
+                                   plan=ExecutionPlan(quant=mode)).upscale(lr)
+        assert r_q.counts == GOLDEN_COUNTS
+        np.testing.assert_array_equal(r_q.ids, r_fp.ids)
