@@ -8,7 +8,17 @@ thresholds (the C54/sec ceiling demotes overflow patches to C27 — throughput
 guaranteed, quality floor kept), per-subnet batched execution,
 overlap+average fusion. Prints Table-XI-style summary. Accepts every
 ``repro.launch.serve`` flag (--ckpt, --budget, --backend, --deadline-ms,
---shards, --quant).
+--shards, --quant, --dispatch, --inflight).
+
+Fused dispatch: ``--dispatch fused`` collapses each frame into ONE compiled
+executable — extract, edge scoring, threshold routing into fixed capacity
+slots (overflow spills to the next-cheaper subnet), per-subnet forward and
+overlap fusion all run on device with no host in the loop; ``--inflight 2``
+additionally double-buffers the stream (frame N's compute overlaps frame
+N+1's ingest; Algorithm-1 reads routing telemetry one frame behind):
+
+    PYTHONPATH=src python examples/serve_8k.py --frames 8 --hw 96 \\
+      --dispatch fused --inflight 2
 
 Quantized serving: ``--quant fxp10`` streams every frame through the
 paper's whole-model FXP10 PAMS lattice (fake-quant emulation on the "ref"

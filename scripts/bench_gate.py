@@ -19,6 +19,13 @@ and fails when the fresh numbers regress past a tolerance band:
     the committed accuracy — a machine-portable signal, unlike absolute
     PSNR on random-init weights.
 
+  * the dispatch sweep gates fused dispatch: output allclose to host
+    dispatch is zero-tolerance (per backend/quant via
+    ``dispatch_conformance``), and fused fps must not fall below host fps
+    beyond the band — both measured back-to-back in the same run, so the
+    ratio travels across machines; ``fused_speedup_x`` is banded against
+    the committed value like ``speedup_x``.
+
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
 
@@ -61,6 +68,43 @@ def compare(committed: dict, fresh: dict, tol: float,
         band(f"frames[{key}].speedup_x",
              got_row["speedup_x"], want_row["speedup_x"])
 
+    # -- dispatch sweep: fused single-dispatch vs host ----------------------
+    want_d = committed.get("dispatch_sweep", {})
+    got_d = fresh.get("dispatch_sweep", {})
+    if want_d:
+        if not got_d:
+            fails.append("dispatch_sweep: missing from fresh run")
+        else:
+            if not got_d.get("fused", {}).get("allclose_vs_host", False):
+                fails.append("dispatch_sweep: fused frame executable no "
+                             "longer allclose to host dispatch")
+            # fused dispatch must never be slower than host dispatch beyond
+            # the tolerance band — measured on the SAME machine in the SAME
+            # run (interleaved reps), so this ratio is machine-portable
+            got_host = got_d.get("host", {}).get("fps", 0.0)
+            got_fused = got_d.get("fused", {}).get("fps", 0.0)
+            if got_fused < got_host * (1.0 - tol):
+                fails.append(
+                    f"dispatch_sweep: fused fps {got_fused:.3f} slower than "
+                    f"host fps {got_host:.3f} beyond the {tol:.0%} band")
+            band("dispatch_sweep.fused_speedup_x",
+                 got_d.get("fused_speedup_x", 0.0),
+                 want_d.get("fused_speedup_x", 0.0))
+    for label, ok in committed.get("dispatch_conformance", {}).items():
+        got_ok = fresh.get("dispatch_conformance", {}).get(label)
+        if got_ok is None:
+            fails.append(f"dispatch_conformance[{label}]: missing from "
+                         f"fresh run")
+        elif not got_ok:
+            fails.append(f"dispatch_conformance[{label}]: fused output no "
+                         f"longer matches host dispatch")
+
+    # NOTE: the shard rows below compare fps against the committed JSON,
+    # which was itself produced on a virtual-CPU mesh where shards > 1 run
+    # SLOWER than one device (the committed "shard_overhead_x" > 1 records
+    # exactly that, see docs/api.md). Host-mesh slowdown is therefore part
+    # of the baseline, not a regression; on real accelerators regenerate
+    # the baseline with --update before gating.
     for s, want_row in committed.get("shard_sweep", {}).items():
         got_row = fresh.get("shard_sweep", {}).get(s)
         if got_row is None:

@@ -54,6 +54,30 @@ assert r8.backend.endswith("-int8"), r8.backend
 print(f"quant smoke OK: {r_q.backend} drop={drop:.3f}dB, {r8.backend}")
 PY
 
+echo "== fused-dispatch smoke (one frame, allclose vs host dispatch) =="
+python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+from repro.api import ExecutionPlan, SREngine
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+
+frame = degrade(jnp.asarray(random_image(0, 128, 128)), 2)
+host = SREngine.from_config(ESSRConfig(scale=2), seed=1)
+fused = SREngine.from_config(ESSRConfig(scale=2), seed=1,
+                             plan=ExecutionPlan(dispatch="fused"))
+rh, rf = host.upscale(frame), fused.upscale(frame)
+assert rf.dispatch == "fused" and rh.dispatch == "host"
+assert rf.spill_counts is not None and not any(rf.spill_counts)
+assert np.array_equal(np.asarray(rf.ids), np.asarray(rh.ids))
+np.testing.assert_allclose(np.asarray(rf.image), np.asarray(rh.image),
+                           atol=1e-5)
+# async double-buffered stream returns the same frames in order
+r_async = list(fused.stream([frame, frame]))
+assert len(r_async) == 2 and all(r.dispatch == "fused" for r in r_async)
+print("fused smoke OK:", rf.counts, "spills", rf.spill_counts)
+PY
+
 echo "== SREngine 2-frame stream smoke =="
 python - <<'PY'
 import jax.numpy as jnp

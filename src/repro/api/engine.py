@@ -34,6 +34,7 @@ previously copy-pasted across `launch/serve.py` and the benchmarks:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import glob
 import json
@@ -41,7 +42,7 @@ import os
 import re
 import time
 import warnings
-from typing import Any, Dict, Iterable, Iterator, List, Optional
+from typing import Any, Deque, Dict, Iterable, Iterator, Optional, Tuple
 
 import numpy as np
 import jax
@@ -53,7 +54,8 @@ from repro.core import subnet_policy as sp
 from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
                                  SwitchingConfig)
 from repro.core.edge_score import edge_score
-from repro.core.pipeline import (edge_selective_sr, resolve_backend,
+from repro.core.pipeline import (edge_selective_sr, fused_frame_fn,
+                                 resolve_backend, snap_capacity,
                                  sr_all_patches_result, sr_whole)
 from repro.kernels.dispatch import resolve_interpret
 from repro.launch.mesh import make_patch_mesh
@@ -129,7 +131,23 @@ class SREngine:
                     f"host; dispatch falls back to one device "
                     f"(per-shard routing control unchanged)")
         self._macs = sp.SubnetMacs.make(cfg, self.plan.patch)
-        self.stats: List[FrameResult] = []
+        # per-frame stream records, bounded: a long-running stream must not
+        # grow host memory without limit (plan.stats_window newest frames;
+        # summary() notes the window)
+        self.stats: Deque[FrameResult] = collections.deque(
+            maxlen=self.plan.stats_window)
+        # fused dispatch state: the live capacity profile per geometry
+        # (plan.capacity pins it; otherwise probed on the first frame of a
+        # geometry and grown after any frame that spilled), and the set of
+        # executables this engine has already traced+compiled — the
+        # bookkeeping behind FrameResult.compiled / warmup()
+        self._fused_caps: Dict[Tuple, Tuple[int, ...]] = {}
+        self._warm: set = set()
+        self._fused_last_done = 0.0    # marginal-latency clock (async stream)
+        #: monotone count of frames ever appended to ``stats`` — consumers
+        #: mirroring the bounded deque (the FrameServer shim) need it to
+        #: tell rotation from silence
+        self.stats_total = 0
 
     def _resolve_quant_pack(self, calibrate, quant_cache):
         """plan.quant -> calibrated `QuantPack` (None for fp32 serving)."""
@@ -183,6 +201,205 @@ class SREngine:
     @property
     def backend_label(self) -> str:
         return self._backend_label(self.plan)
+
+    # -- fused dispatch (plan.dispatch == "fused") ---------------------------
+
+    def _mark_warm(self, key) -> bool:
+        """True when ``key``'s executable was already compiled by this
+        engine; marks it warm either way (the caller is about to run it).
+
+        Best-effort bookkeeping: it mirrors the process-wide executable
+        caches (`fused_frame_fn` / `get_geometry` LRUs, both maxsize 128,
+        and XLA's own jit cache) without sharing their eviction — an engine
+        cycling through more combos than those caches hold can see a
+        re-tracing frame reported ``compiled=True``. Sized so that takes
+        >100 concurrent (geometry, capacity-profile) regimes."""
+        warm = key in self._warm
+        self._warm.add(key)
+        return warm
+
+    def _snap_profile(self, desired, geom, p: ExecutionPlan
+                      ) -> Tuple[int, ...]:
+        """Per-subnet desired counts -> a capacity profile: entry 0 is 0
+        (the bilinear lane runs dense), conv entries snap to the plan's
+        bucket ladder (bounded recompilation). Profiles are cached
+        UNclamped — the streaming C54 budget ceiling is applied per call
+        in `_fused_caps_for`, so the same geometry serves both upscale()
+        (full profile) and the stream (ceiling enforced) correctly no
+        matter which seeded the cache."""
+        return tuple([0] + [snap_capacity(int(d), p.buckets, geom.n)
+                            for d in desired[1:]])
+
+    def _c54_frame_budget(self) -> int:
+        """Per-frame share of the Algorithm-1 C54/sec budget — the hard
+        ceiling fused streaming enforces in-graph via the C54 capacity
+        (overflow spills to C27, the paper's "the rest of the patches run
+        with C27")."""
+        c = self.switcher.cfg
+        return max(1, int(c.c54_per_sec_budget) // max(c.fps, 1))
+
+    def _fused_caps_for(self, geom, p: ExecutionPlan, frame,
+                        thresholds: Tuple[float, float],
+                        streaming: bool) -> Tuple[int, ...]:
+        """Resolve the capacity profile for one frame. ``plan.capacity``
+        pins it; otherwise the FIRST frame of a geometry is probed on the
+        host (the only host routing sync fused dispatch ever pays — later
+        frames reuse/grow the cached profile with no sync)."""
+        widths = self.cfg.subnet_widths()
+        if p.capacity is not None:
+            if len(p.capacity) != len(widths):
+                raise ValueError(
+                    f"plan.capacity {p.capacity} must have one entry per "
+                    f"subnet width {widths}")
+            # a pinned profile is served verbatim, streaming or not: the
+            # operator fixed the compiled shape, so its C54 entry IS the
+            # per-frame ceiling (the budget-derived clamp below applies
+            # only to auto profiles) — documented on ExecutionPlan.capacity
+            return p.capacity
+        key = geom.cache_key
+        caps = self._fused_caps.get(key)
+        if caps is None:
+            t1, t2 = thresholds
+            scores = np.asarray(edge_score(geom.extract(frame)))
+            counts = sp.subnet_counts(sp.decide(scores, t1, t2))
+            caps = self._snap_profile(counts, geom, p)
+            self._fused_caps[key] = caps
+        if streaming:
+            # the hard C54 ceiling applies to the STREAM only, per call:
+            # the cached profile stays unclamped so a warmup()/upscale()
+            # seeding cannot smuggle an over-budget capacity into serving,
+            # and a stream-seeded profile does not force spills on later
+            # single-frame upscale() calls
+            caps = caps[:-1] + (min(caps[-1], self._c54_frame_budget()),)
+        return caps
+
+    def _grow_caps(self, geom, p: ExecutionPlan, counts, spills) -> None:
+        """After a frame that spilled, grow the geometry's capacity profile
+        to the bucket ceiling of the demand actually seen (served + spilled)
+        so the next frame routes without demotion. Grow-only: shrinking
+        would churn recompiles; the bucket ladder bounds total growth."""
+        if p.capacity is not None or not any(spills[1:]):
+            return
+        old = self._fused_caps.get(geom.cache_key)
+        if old is None:
+            return
+        desired = [c + s for c, s in zip(counts, spills)]
+        new = self._snap_profile(desired, geom, p)
+        merged = tuple(max(o, n) for o, n in zip(old, new))
+        if merged != old:
+            self._fused_caps[geom.cache_key] = merged
+
+    def _launch_fused(self, frame, p: ExecutionPlan,
+                      thresholds: Tuple[float, float],
+                      streaming: bool) -> dict:
+        """Dispatch one frame into the fused executable WITHOUT blocking.
+        Returns the in-flight record the double-buffered stream finalizes
+        later; host work here is bounded (geometry/caps lookups + the async
+        dispatch), so frame N+1's ingest overlaps frame N's compute."""
+        t0 = time.perf_counter()
+        geom = p.geometry(frame.shape[0], frame.shape[1], self.cfg.scale)
+        caps = self._fused_caps_for(geom, p, frame, thresholds, streaming)
+        fn = fused_frame_fn(geom, caps, self.cfg, self.backend, p.interpret,
+                            self.mesh, self.qpack)
+        compiled = self._mark_warm(("fused", geom.cache_key, caps,
+                                    p.interpret))
+        t1, t2 = thresholds
+        outs = fn(self.params, frame, t1, t2)
+        return {"outs": outs, "geom": geom, "caps": caps, "t0": t0,
+                "plan": p, "thresholds": (t1, t2), "compiled": compiled,
+                "streaming": streaming}
+
+    def _finalize_fused(self, rec: dict) -> FrameResult:
+        """Block on one in-flight fused frame, materialize its routing
+        telemetry (ids/scores/counts/spills), and run the host-side control
+        that fused dispatch deferred: Algorithm-1 threshold trim from the
+        (possibly one-frame-old) counts, straggler demotion on a missed
+        deadline, and capacity growth after spill."""
+        img, ids, scores, counts, spills = rec["outs"]
+        img.block_until_ready()
+        done = time.perf_counter()
+        # marginal frame time: under async streaming a frame's launch-to-
+        # ready wall clock includes the device time of EARLIER in-flight
+        # frames — clocking from whichever is later (this frame's launch or
+        # the previous frame's completion) reports the pipelined per-frame
+        # service time, so fps aggregates are meaningful and a per-frame
+        # deadline does not fire spuriously on every steady-state frame.
+        # Synchronous calls are unaffected (the previous finalize always
+        # precedes the next launch).
+        dt = done - max(rec["t0"], self._fused_last_done)
+        self._fused_last_done = done
+        p, geom, streaming = rec["plan"], rec["geom"], rec["streaming"]
+        counts_t = tuple(int(c) for c in np.asarray(counts))
+        spills_t = tuple(int(s) for s in np.asarray(spills))
+        macs = (self._macs if p.patch == self.plan.patch
+                else sp.SubnetMacs.make(self.cfg, p.patch))
+        saving = macs.saving_vs_c54(counts_t)
+        self._grow_caps(geom, p, counts_t, spills_t)
+        live = rec["thresholds"]
+        missed = False
+        shard_counts = None
+        if streaming:
+            self.switcher.observe_frame(counts_t[sp.C54])
+            missed = bool(self.deadline_s and dt > self.deadline_s)
+            if missed:
+                self.switcher.demote_for_straggler(severity=1.0)
+            live = self.switcher.thresholds
+            if self.bank is not None:
+                # reporting only: fused routing is one in-graph decision, so
+                # per-shard threshold control is a host-dispatch feature —
+                # strip counts are still surfaced for observability
+                shard_counts = tuple(
+                    sp.subnet_counts(np.asarray(ids)[sl])
+                    for sl in geom.shard_slices(self.plan.shards))
+        # ids/scores stay device arrays: the control loop only needs the
+        # scalar counts/spills, so the per-patch telemetry transfers lazily
+        # — consumers that index it (np.asarray) pay the copy, the
+        # steady-state stream does not
+        out = FrameResult(image=img, mode="edge_select",
+                          backend=self._backend_label(p), ids=ids,
+                          scores=scores, counts=counts_t,
+                          mac_saving=saving, latency_s=dt, thresholds=live,
+                          deadline_missed=missed, shards=self.plan.shards,
+                          shard_counts=shard_counts, dispatch="fused",
+                          spill_counts=spills_t, compiled=rec["compiled"])
+        if streaming:
+            self.stats.append(dataclasses.replace(out, image=None,
+                                                  ids=None, scores=None))
+            self.stats_total += 1
+        return out
+
+    def _upscale_fused(self, frame, p: ExecutionPlan) -> FrameResult:
+        """upscale()'s fused path: launch + finalize back-to-back (single
+        frames have nothing to overlap with)."""
+        return self._finalize_fused(
+            self._launch_fused(frame, p, (p.t1, p.t2), streaming=False))
+
+    def warmup(self, shape: Tuple[int, int]) -> FrameResult:
+        """Pre-pay trace+compile for an ``(h, w)`` LR frame shape.
+
+        Runs one deterministic synthetic frame — thirds of smooth gradient /
+        mild texture / checkerboard, so all three subnets populate — through
+        the plan's dispatch path without touching ``stats`` or the adaptive
+        thresholds. Returns its FrameResult (``compiled=False`` on a cold
+        engine); the next real frame of this shape reports
+        ``compiled=True`` and a latency free of compile time. Under fused
+        dispatch with ``plan.capacity=None`` this also seeds the capacity
+        profile from the synthetic routing — live content that routes past
+        it still spills once (that frame's ``spill_counts`` say so; it runs
+        the already-warm executable, so ``compiled`` stays True) and the
+        profile regrows, with the NEXT frame paying the recompile and
+        reporting ``compiled=False``."""
+        h, w = int(shape[0]), int(shape[1])
+        yy, xx = jnp.meshgrid(jnp.linspace(0.0, 1.0, h),
+                              jnp.linspace(0.0, 1.0, w), indexing="ij")
+        checker = ((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2
+                   ).astype(jnp.float32)
+        smooth = jnp.stack([yy, xx, (yy + xx) / 2], axis=-1)
+        frame = jnp.where((xx < 1 / 3)[..., None], smooth,
+                          jnp.where((xx < 2 / 3)[..., None],
+                                    smooth + 0.03 * checker[..., None],
+                                    checker[..., None] * jnp.ones(3)))
+        return self.upscale(jnp.clip(frame, 0.0, 1.0))
 
     # -- constructors --------------------------------------------------------
 
@@ -319,6 +536,12 @@ class SREngine:
                 f"plan.quant is engine-level: engine was built with "
                 f"{self.plan.quant!r}, per-call plan asks for {p.quant!r}; "
                 f"construct a second engine for a different quant mode")
+        if (p.dispatch == "fused" and mode == "edge_select"
+                and ids_override is None and p.subnet_policy == "threshold"):
+            # the single-dispatch frame executable; every other combination
+            # (forced policies, ids_override, all_patches, whole) routes on
+            # the host and says so in FrameResult.dispatch
+            return self._upscale_fused(frame, p)
         t0 = time.perf_counter()
 
         widths = self.cfg.subnet_widths()
@@ -326,15 +549,22 @@ class SREngine:
             if width is not None and width not in widths:
                 raise ValueError(f"mode='whole' needs width in {widths} "
                                  f"(or None for full), got {width}")
+            compiled = self._mark_warm(
+                ("whole", (int(frame.shape[0]), int(frame.shape[1])), width))
             img = sr_whole(self.params, frame, self.cfg, width=width)
             img.block_until_ready()
             # sr_whole always runs the pure-JAX path; label it honestly
             return FrameResult(image=img, mode=mode, backend="ref",
-                               latency_s=time.perf_counter() - t0)
+                               latency_s=time.perf_counter() - t0,
+                               compiled=compiled)
 
         # cached gather/scatter maps for this frame shape (zero host setup
         # after the first frame of a given geometry)
         geom = p.geometry(frame.shape[0], frame.shape[1], self.cfg.scale)
+        # first frame of a geometry pays trace+compile (an approximation for
+        # host dispatch, where unseen bucket sizes can still recompile later;
+        # exact for the fused path, which keys on its capacity profile)
+        compiled = self._mark_warm(("host", geom.cache_key))
         scored = False
         routed_by_thresholds = False
         result_mode = mode
@@ -382,7 +612,7 @@ class SREngine:
                                        else (0.0, 0.0)),
                            # sharding is engine-level (like backend): a
                            # per-call plan cannot rebuild the mesh
-                           shards=self.plan.shards)
+                           shards=self.plan.shards, compiled=compiled)
 
     def reference(self, frame: jax.Array, width: Optional[int] = None) -> FrameResult:
         """Whole-image convolution — the lossless reference of Table III."""
@@ -409,9 +639,16 @@ class SREngine:
                 f"streaming routes adaptively and cannot honour forced "
                 f"subnet_policy {self.plan.subnet_policy!r}; use upscale() "
                 f"for forced routing")
+        if self.plan.dispatch == "fused":
+            # the single-dispatch stream path: routing + the C54 ceiling run
+            # in-graph (capacity slots), Algorithm-1 trim runs host-side
+            # from the materialized counts (see _finalize_fused)
+            return self._finalize_fused(self._launch_fused(
+                frame, self.plan, self.switcher.thresholds, streaming=True))
         t0 = time.perf_counter()
         geom = self.plan.geometry(frame.shape[0], frame.shape[1],
                                   self.cfg.scale)
+        compiled = self._mark_warm(("host", geom.cache_key))
         patches, pos = geom.extract(frame), geom.pos
         scores = np.asarray(edge_score(patches))
         sharded = self.bank is not None
@@ -451,17 +688,42 @@ class SREngine:
                           deadline_missed=missed, shards=self.plan.shards,
                           shard_counts=shard_counts,
                           shard_thresholds=shard_thresholds,
-                          shard_deadline_missed=shard_missed)
+                          shard_deadline_missed=shard_missed,
+                          compiled=compiled)
         # retain only the compact record: holding every SR image would grow
         # unboundedly over a long stream (one 8K frame is ~100s of MB)
         self.stats.append(dataclasses.replace(out, image=None,
                                               ids=None, scores=None))
+        self.stats_total += 1
         return out
 
     def stream(self, frames: Iterable[jax.Array]) -> Iterator[FrameResult]:
-        """Serve a frame stream; yields one FrameResult per frame."""
+        """Serve a frame stream; yields one FrameResult per frame.
+
+        Under fused dispatch with ``plan.inflight >= 2`` the stream is
+        double-buffered: up to ``inflight`` frames stay in flight, so frame
+        N's device compute overlaps frame N+1's host-side ingest and the
+        per-frame Python round-trip leaves the steady-state critical path.
+        The cost is a documented one-frame control delay: the Algorithm-1
+        switcher (and capacity growth) adapt from the newest *materialized*
+        frame, which trails the newest *launched* frame by up to
+        ``inflight - 1``. Results still arrive strictly in frame order."""
+        if self.plan.dispatch == "fused" and self.plan.inflight > 1:
+            yield from self._stream_fused_async(frames)
+            return
         for frame in frames:
             yield self.serve(frame)
+
+    def _stream_fused_async(self, frames: Iterable[jax.Array]
+                            ) -> Iterator[FrameResult]:
+        pending: Deque[dict] = collections.deque()
+        for frame in frames:
+            pending.append(self._launch_fused(
+                frame, self.plan, self.switcher.thresholds, streaming=True))
+            while len(pending) >= self.plan.inflight:
+                yield self._finalize_fused(pending.popleft())
+        while pending:
+            yield self._finalize_fused(pending.popleft())
 
     # -- aggregate reporting -------------------------------------------------
 
@@ -470,4 +732,7 @@ class SREngine:
         s = summarize_stats(self.stats)
         if s:
             s["backend"] = self.backend_label
+            # the record list is a bounded deque: aggregates cover at most
+            # the newest stats_window streamed frames
+            s["stats_window"] = self.plan.stats_window
         return s

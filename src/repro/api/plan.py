@@ -30,6 +30,17 @@ from repro.quant.pams import QUANT_MODES as pams_quant_modes
 #:                     one subnet (the ablation references of Tables III/IX).
 SUBNET_POLICIES = ("threshold", "all_bilinear", "all_c27", "all_c54")
 
+#: Dispatch modes accepted by :class:`ExecutionPlan`:
+#: ``"host"``  — routing on the host: per-frame edge-score sync, Python loop
+#:               over subnet buckets (supports every mode/policy/override)
+#: ``"fused"`` — one compiled frame executable per (geometry, capacity
+#:               profile): extract -> edge-score -> threshold routing ->
+#:               capacity-slotted per-subnet forward -> scatter-add fusion,
+#:               no host in the loop (threshold-routed edge_select only;
+#:               other modes fall back to host dispatch, documented in
+#:               docs/api.md "Dispatch modes & async streaming").
+DISPATCH_MODES = ("host", "fused")
+
 #: Serving quantization modes accepted by :class:`ExecutionPlan`:
 #: ``None``    — fp32 serving (the default)
 #: ``"fxp10"`` — the paper's whole-model FXP10 (Sec. IV-H)
@@ -59,6 +70,35 @@ class ExecutionPlan:
     #: kernel stack (kernels/qconv.py). Surfaced as a FrameResult.backend
     #: suffix ("ref-fxp10", "pallas-int8", "pallas-interpret-int8", ...).
     quant: Optional[str] = None
+    #: Frame dispatch: "host" (routing on the host, the default) or "fused"
+    #: (one compiled executable per (geometry, capacity profile) — see
+    #: DISPATCH_MODES above and docs/api.md). Applies to threshold-routed
+    #: edge_select calls; forced policies / ids_override / all_patches /
+    #: whole always run host dispatch.
+    dispatch: str = "host"
+    #: Fused-dispatch per-subnet slot capacities, aligned with
+    #: ``cfg.subnet_widths()`` (entry 0 — bilinear — is ignored: that lane
+    #: runs dense as the spill floor). None = automatic: the engine probes
+    #: the first frame of each geometry on the host, snaps counts to
+    #: ``buckets`` (`core.pipeline.snap_capacity`), and grows a subnet's
+    #: capacity after any frame that spilled; when streaming, the C54 entry
+    #: is additionally clamped to the per-frame share of the Algorithm-1
+    #: C54/sec budget. Pin explicitly to fix the compiled shape (tests;
+    #: validated deployments) — a pinned profile is served VERBATIM, so its
+    #: C54 entry *replaces* the budget-derived ceiling: the pin is the
+    #: per-frame hard ceiling, and it is on the operator to size it within
+    #: the deployment's compute budget.
+    capacity: Optional[Tuple[int, ...]] = None
+    #: Async double-buffering depth for ``SREngine.stream`` under fused
+    #: dispatch: 1 (default) serves synchronously; >= 2 keeps that many
+    #: frames in flight — frame N's device compute overlaps frame N+1's
+    #: host-side ingest, and the Algorithm-1 switcher reads routing
+    #: telemetry one frame behind (a documented control delay).
+    inflight: int = 1
+    #: Bound on the per-frame records ``SREngine.stats`` retains (a deque:
+    #: the newest ``stats_window`` streamed frames). Generous by default;
+    #: ``summary()`` aggregates over at most this window and says so.
+    stats_window: int = 4096
     #: Data-parallel patch-stream shards. 1 = the single-device path. > 1
     #: splits each frame's routed patch buckets across that many devices
     #: (shard_map over a 1-D mesh) and gives each shard its own Algorithm-1
@@ -87,6 +127,31 @@ class ExecutionPlan:
         if self.quant not in QUANT_MODES:
             raise ValueError(f"quant must be one of {QUANT_MODES}, "
                              f"got {self.quant!r}")
+        if self.dispatch not in DISPATCH_MODES:
+            raise ValueError(f"dispatch {self.dispatch!r} not in "
+                             f"{DISPATCH_MODES}")
+        if self.capacity is not None:
+            try:
+                caps = tuple(int(c) for c in self.capacity)
+            except (TypeError, ValueError):
+                raise ValueError(f"capacity must be a tuple of ints >= 0, "
+                                 f"got {self.capacity!r}")
+            if any(c < 0 for c in caps):
+                raise ValueError(f"capacity entries must be >= 0, got {caps}")
+            object.__setattr__(self, "capacity", caps)
+        if not isinstance(self.inflight, int) or self.inflight < 1:
+            raise ValueError(f"inflight must be a positive int, "
+                             f"got {self.inflight!r}")
+        if self.inflight > 1 and self.dispatch != "fused":
+            # host dispatch blocks per frame, so the combination would be
+            # silently inert — refuse rather than let a user believe the
+            # stream is double-buffered
+            raise ValueError(f"inflight={self.inflight} requires "
+                             f"dispatch='fused' (host dispatch serves "
+                             f"synchronously)")
+        if not isinstance(self.stats_window, int) or self.stats_window < 1:
+            raise ValueError(f"stats_window must be a positive int, "
+                             f"got {self.stats_window!r}")
         if not isinstance(self.shards, int) or self.shards < 1:
             raise ValueError(f"shards must be a positive int, "
                              f"got {self.shards!r}")

@@ -24,8 +24,11 @@ class FrameResult:
     backend: str                              # "ref" | "pallas" (compiled)
                                               # | "pallas-interpret" (CPU
                                               # interpreter fallback)
-    ids: Optional[np.ndarray] = None          # (N,) subnet id per patch
-    scores: Optional[np.ndarray] = None       # (N,) edge score per patch
+    # (N,) subnet id / edge score per patch. Host dispatch stores writable
+    # NumPy arrays; fused dispatch stores (immutable) jax device arrays —
+    # the control loop never forces them, consumers np.asarray on use
+    ids: Optional[np.ndarray] = None
+    scores: Optional[np.ndarray] = None
     counts: Tuple[int, int, int] = (0, 0, 0)  # (bilinear, C27, C54) patches
     mac_saving: float = 0.0                   # vs all-C54 pipeline
     latency_s: float = 0.0                    # wall-clock incl. device sync
@@ -35,6 +38,22 @@ class FrameResult:
     # "final_thresholds" semantics)
     thresholds: Tuple[float, float] = (0.0, 0.0)
     deadline_missed: bool = False             # streaming only
+    # which dispatch path actually ran this frame: "host" (routing on the
+    # host) or "fused" (the single-dispatch frame executable). A fused-plan
+    # call that a mode forces back to host dispatch says "host" here.
+    dispatch: str = "host"
+    # fused dispatch only: per-subnet DEMOTION-HOP counts — entry k is how
+    # many patches were demoted from subnet k to k-1 because k's capacity
+    # slots were full (including patches that arrived at k by spilling in
+    # from k+1, so a patch cascading C54->C27->bilinear appears in both
+    # conv entries: the sum counts hops, not distinct patches; entry 0 —
+    # bilinear, the dense floor — is always 0). None under host dispatch.
+    spill_counts: Optional[Tuple[int, ...]] = None
+    # False when this call paid trace+compile for its executable (the first
+    # frame of a geometry — and, under fused dispatch, of a capacity
+    # profile). summarize_stats excludes such warm-up frames from latency
+    # aggregates; SREngine.warmup() pre-pays them.
+    compiled: bool = True
     # -- sharded streaming (plan.shards > 1); None on single-shard runs ------
     shards: int = 1                           # logical patch-stream shards
     # per-shard (bilinear, C27, C54) patch counts, raster-strip order
@@ -56,17 +75,31 @@ def summarize_stats(stats) -> dict:
     from repro.core import subnet_policy as sp
     if not stats:
         return {}
+    stats = list(stats)                  # may arrive as a bounded deque
     counts = np.array([s.counts for s in stats])
     total = counts.sum()
+    # latency/fps aggregate over steady-state frames only: a frame that paid
+    # trace+compile (compiled=False) would smear a one-off host cost into
+    # the throughput signal. When every frame was a warm-up (a 1-frame
+    # stream), fall back to the full set rather than reporting nothing.
+    steady = [s for s in stats if getattr(s, "compiled", True)]
+    warmups = len(stats) - len(steady)
+    lat = [s.latency_s for s in (steady if steady else stats)]
     out = {
         "frames": len(stats),
         "subnet_share": dict(zip(sp.SUBNET_NAMES,
                                  (counts.sum(0) / max(total, 1)).round(4).tolist())),
         "mean_mac_saving": float(np.mean([s.mac_saving for s in stats])),
-        "mean_latency_s": float(np.mean([s.latency_s for s in stats])),
+        "mean_latency_s": float(np.mean(lat)),
         "deadline_misses": int(sum(s.deadline_missed for s in stats)),
         "final_thresholds": stats[-1].thresholds,
     }
+    if warmups:
+        out["warmup_frames_excluded"] = warmups
+    spills = [s.spill_counts for s in stats
+              if getattr(s, "spill_counts", None) is not None]
+    if spills:
+        out["spilled_patches"] = np.asarray(spills).sum(0).tolist()
     shards = max((getattr(s, "shards", 1) or 1) for s in stats)
     if shards > 1:
         out["shards"] = shards

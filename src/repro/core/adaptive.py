@@ -76,6 +76,20 @@ class AdaptiveSwitcher:
             overflow = c54_idx[max(budget_left, 0):]
             ids[overflow] = sp.C27
         n_c54 = int((ids == sp.C54).sum())
+        self.observe_frame(n_c54)
+        return ids
+
+    def observe_frame(self, n_c54: int) -> None:
+        """Feed back one served frame's C54 count: the per-frame threshold
+        trim (Algorithm 1's else-branch) plus the per-second bookkeeping.
+
+        This is ``assign`` minus the routing itself — the fused-dispatch
+        stream uses it because routing happened *in the frame executable*
+        (the C54 capacity slots enforce the hard ceiling in-graph, the
+        overflow spilling to C27 exactly as "the rest of the patches run
+        with C27"); the host only adapts thresholds from the materialized
+        counts, one frame behind under async streaming."""
+        n_c54 = int(n_c54)
         self._c54_this_second += n_c54
 
         # --- per-frame threshold trim (Algorithm 1's else-branch) ---------
@@ -92,7 +106,6 @@ class AdaptiveSwitcher:
         if self._frames_this_second >= self.cfg.fps:
             self._frames_this_second = 0
             self._c54_this_second = 0
-        return ids
 
     def demote_for_straggler(self, severity: float = 1.0) -> None:
         """Straggler hook: a late shard raises thresholds proportionally."""

@@ -116,13 +116,26 @@ class PatchGeometry:
     def n(self) -> int:
         return len(self.pos)
 
+    @property
+    def cache_key(self) -> Tuple[int, int, int, int, int]:
+        """Hashable identity of this tiling — ``(H, W, patch, overlap,
+        scale)`` fully determines every index map. Used by the fused frame
+        executable cache and the engine's warm-up bookkeeping (the object
+        itself hashes by identity, which only coincides with this key while
+        the `get_geometry` LRU retains the instance)."""
+        return (*self.hw, self.patch, self.overlap, self.scale)
+
     def shard_slices(self, shards: int) -> Tuple[slice, ...]:
         """Contiguous raster-strip partition of this geometry's patches —
         the unit of per-shard routing/straggler control (see core.adaptive)."""
         return shard_slices(self.n, shards)
 
     def extract(self, img: jax.Array) -> jax.Array:
-        """(H,W,C) -> (N,patch,patch,C): one device gather."""
+        """(H,W,C) -> (N,patch,patch,C): one device gather.
+
+        Traceable: safe to call on a traced ``img`` inside an enclosing jit
+        (the fused frame graph does) — the index maps close over as
+        constants and the reflect-pad path is shape-static."""
         h, w = self.hw
         hp, wp = self.padded_hw
         if (hp, wp) != (h, w):
@@ -133,7 +146,10 @@ class PatchGeometry:
 
     def fuse_average(self, sr_patches: jax.Array) -> jax.Array:
         """(N, p*s, p*s, C) -> (H*s, W*s, C): separable scatter-add, then a
-        precomputed per-pixel overlap division (overlap-and-average)."""
+        precomputed per-pixel overlap division (overlap-and-average).
+
+        Traceable like :meth:`extract`: the fused frame graph calls it on a
+        traced patch tensor, inlining the (already jitted) separable fold."""
         hp, wp = self.padded_hw
         s = self.scale
         n_y, n_x = self.grid_yx

@@ -184,6 +184,156 @@ def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
     return out[:n] if pad else out
 
 
+# ---------------------------------------------------------------------------
+# fused single-dispatch frame graph (ExecutionPlan.dispatch = "fused")
+#
+# The host-dispatch path above keeps routing on the host: a per-frame
+# ``np.asarray(edge_score(...))`` sync, a Python loop over subnet buckets,
+# and a trailing ``block_until_ready`` — so frame N+1 cannot start until
+# frame N's full host round-trip completes. The fused path collapses
+# extract -> edge-score -> threshold routing -> capacity-slotted per-subnet
+# forward -> scatter-add fusion into ONE jitted executable per
+# (geometry, capacity profile): patches are one-hot dispatched into fixed
+# per-subnet capacity slots (the same slot-dispatch shape as
+# distributed/moe.py, and the shape-static analog of the ASIC's fixed PE
+# array / "configurable group of layer mapping"). Capacities are snapped to
+# the plan's bucket ladder so recompilation stays bounded; patches beyond a
+# subnet's capacity spill deterministically (raster order) to the next
+# cheaper subnet, with subnet 0 (bilinear) as the dense floor that never
+# overflows. Thresholds are traced arguments, so Algorithm-1 adaptation
+# never recompiles the frame.
+# ---------------------------------------------------------------------------
+
+def snap_capacity(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                  n_total: Optional[int] = None) -> int:
+    """Desired slot count -> capacity: 0 stays 0 (the subnet lane is elided
+    from the graph), otherwise the bucket ceiling, clamped to ``n_total``
+    (the full patch count recurs per geometry, so an all-one-subnet frame
+    compiles the exact full-batch shape instead of a padded bucket)."""
+    if n <= 0:
+        return 0
+    cap = _bucket(n, buckets)
+    return min(cap, n_total) if n_total is not None else cap
+
+
+def capacity_route(ids: jax.Array, caps: Tuple[int, ...]
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """In-graph capacity routing: (N,) subnet ids + static per-subnet slot
+    capacities -> (effective ids, per-subnet spill counts).
+
+    Processed priciest-first: the patches of subnet ``k`` beyond ``caps[k]``
+    (raster order — deterministic, matching the paper's "the rest of the
+    patches run with C27") are demoted to subnet ``k-1``, where they compete
+    for slots in raster order together with that subnet's native patches.
+    Subnet 0 (bilinear) is the dense floor and never spills; ``caps[0]`` is
+    ignored. ``spills[k]`` counts the patches that wanted ``k`` (natively or
+    by spill-in) but ran ``k-1``."""
+    spills = [jnp.zeros((), jnp.int32)]          # subnet 0 never spills
+    eff = ids
+    for k in range(len(caps) - 1, 0, -1):
+        member = eff == k
+        pos = jnp.cumsum(member.astype(jnp.int32)) - 1
+        over = member & (pos >= caps[k])
+        spills.append(jnp.sum(over).astype(jnp.int32))
+        eff = jnp.where(over, k - 1, eff)
+    spills = spills[:1] + spills[1:][::-1]       # ascending subnet order
+    return eff, jnp.stack(spills)
+
+
+def capacity_dispatch(patches: jax.Array, eff_ids: jax.Array, subnet: int,
+                      cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-hot dispatch of subnet ``subnet``'s patches into ``cap`` fixed
+    slots (raster order). Returns (slot batch (cap, p, p, C), per-patch slot
+    index with ``cap`` as the non-member dustbin, membership mask).
+
+    Callers must have routed ``eff_ids`` through :func:`capacity_route`
+    first — post-spill every member's raster rank is < ``cap``."""
+    member = eff_ids == subnet
+    pos = jnp.cumsum(member.astype(jnp.int32)) - 1
+    slot = jnp.where(member, pos, cap)
+    disp = jnp.zeros((cap + 1,) + patches.shape[1:], patches.dtype)
+    disp = disp.at[slot].add(
+        jnp.where(member[:, None, None, None], patches, 0))
+    return disp[:cap], slot, member
+
+
+def capacity_combine(out_patches: jax.Array, sr_slots: jax.Array,
+                     slot: jax.Array, member: jax.Array) -> jax.Array:
+    """Scatter one subnet's slot outputs back over the patch axis: patch n
+    takes ``sr_slots[slot[n]]`` where it is a member (the dustbin row reads
+    zeros and is masked off)."""
+    y = jnp.concatenate(
+        [sr_slots, jnp.zeros((1,) + sr_slots.shape[1:], sr_slots.dtype)], 0)
+    return jnp.where(member[:, None, None, None], jnp.take(y, slot, axis=0),
+                     out_patches)
+
+
+@functools.lru_cache(maxsize=128)      # sized with get_geometry's LRU: an
+                                       # evicted executable would silently
+                                       # re-trace under SREngine's warm-key
+                                       # bookkeeping
+def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
+                   cfg: ESSRConfig, backend: str,
+                   interpret: Optional[bool], mesh, quant):
+    """The compiled frame executable: one per (geometry, capacity profile,
+    backend, interpret, mesh, quant). Signature of the returned callable:
+
+        (params, frame, t1, t2) -> (image, eff_ids, scores, counts, spills)
+
+    ``t1``/``t2`` are traced (threshold adaptation never recompiles); every
+    other knob is static. All five outputs are device arrays — callers
+    materialize them lazily (the async stream reads routing telemetry one
+    frame behind)."""
+    from repro.models.layers import bilinear_resize
+
+    base_forward = resolve_forward(backend, quant)
+    if mesh is not None and int(mesh.size) > 1:
+        def forward(params, patches, cfg, width, interpret=None):
+            return sharded_forward(params, patches, cfg, width, mesh=mesh,
+                                   backend=backend, interpret=interpret,
+                                   quant=quant)
+    else:
+        forward = base_forward
+    widths = cfg.subnet_widths()
+    if len(caps) != len(widths):
+        raise ValueError(f"capacity profile {caps} must have one entry per "
+                         f"subnet width {widths}")
+
+    def run(params, frame, t1, t2):
+        patches = geometry.extract(frame)
+        scores = edge_score(patches)
+        eff, spills = capacity_route(sp.decide(scores, t1, t2), caps)
+        # subnet 0 is the dense floor: bilinear for every patch (it is the
+        # spill target of last resort and costs no conv — the ASIC's router
+        # bypass), overwritten wherever a conv subnet owns the patch
+        out = bilinear_resize(patches, cfg.scale)
+        for k in range(1, len(widths)):
+            if caps[k] == 0:
+                continue                         # lane elided from the graph
+            disp, slot, member = capacity_dispatch(patches, eff, k, caps[k])
+            sr = forward(params, disp, cfg, widths[k], interpret=interpret)
+            out = capacity_combine(out, sr, slot, member)
+        counts = jnp.stack([jnp.sum(eff == k).astype(jnp.int32)
+                            for k in range(len(widths))])
+        return geometry.fuse_average(out), eff, scores, counts, spills
+
+    return jax.jit(run)
+
+
+def fused_frame_forward(params, frame, cfg: ESSRConfig, *,
+                        geometry: PatchGeometry, caps: Tuple[int, ...],
+                        t1: float = sp.DEFAULT_T1, t2: float = sp.DEFAULT_T2,
+                        backend: str = "ref",
+                        interpret: Optional[bool] = None,
+                        mesh=None, quant=None):
+    """One frame through the fused single-dispatch graph (see
+    :func:`fused_frame_fn`). Returns the raw device-array five-tuple; the
+    engine wraps it into a `FrameResult` and owns capacity-profile policy."""
+    return fused_frame_fn(geometry, tuple(int(c) for c in caps), cfg,
+                          backend, interpret, mesh, quant)(
+        params, frame, t1, t2)
+
+
 @dataclasses.dataclass
 class SRResult:
     image: jax.Array

@@ -4,13 +4,17 @@ Streams synthetic frames through ``SREngine.stream`` (edge scores ->
 Algorithm-1 adaptive thresholds -> per-subnet batched ESSR -> overlap+average
 fusion) and prints the Table-XI-style summary (subnet shares, MAC saving,
 latency). ``--quant fxp10|int8`` serves the PAMS quantized datapath instead
-of fp32 (see docs/api.md "Quantized serving").
+of fp32 (see docs/api.md "Quantized serving"). ``--dispatch fused`` serves
+every frame as ONE compiled executable (in-graph capacity routing), and
+``--inflight 2`` double-buffers the stream on top of it (see docs/api.md
+"Dispatch modes & async streaming").
 
     PYTHONPATH=src python -m repro.launch.serve --frames 4 --hw 96
 """
 from __future__ import annotations
 
 import argparse
+import collections
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +39,14 @@ def main():
                     help="PAMS quantized serving: fxp10 (paper Sec. IV-H) or "
                          "int8 (TPU MXU datapath); alphas PTQ-calibrate at "
                          "engine construction")
+    ap.add_argument("--dispatch", default="host", choices=("host", "fused"),
+                    help="frame dispatch: host routing (default) or the "
+                         "fused single-dispatch frame executable (capacity-"
+                         "slotted in-graph routing; see docs/api.md)")
+    ap.add_argument("--inflight", type=int, default=1,
+                    help="async double-buffering depth for fused-dispatch "
+                         "streaming: >= 2 overlaps frame N's compute with "
+                         "frame N+1's ingest (one-frame control delay)")
     args = ap.parse_args()
 
     from repro.api import ExecutionPlan, SREngine
@@ -51,22 +63,37 @@ def main():
     engine = SREngine.from_checkpoint(
         args.ckpt, cfg=ESSRConfig(scale=args.scale), backend=args.backend,
         plan=ExecutionPlan(shards=args.shards,
-                           quant=None if args.quant == "none" else args.quant),
+                           quant=None if args.quant == "none" else args.quant,
+                           dispatch=args.dispatch, inflight=args.inflight),
         switching=sw, deadline_s=args.deadline_ms / 1e3 or None, verbose=True)
-    print(f"serving backend: {engine.backend_label}")
+    print(f"serving backend: {engine.backend_label} "
+          f"(dispatch={args.dispatch}, inflight={args.inflight})")
+    engine.warmup((args.hw, args.hw))   # pre-pay trace+compile; the printed
+                                        # per-frame latencies are steady-state
 
-    def frames():
+    # lazy frame source: only the in-flight window of HR frames stays live
+    # (stream() pulls at most plan.inflight ahead of the results it yields,
+    # so hr_pending never holds more than that — an 8K stream must not
+    # materialize every frame up front)
+    hr_pending = collections.deque()
+
+    def lr_stream():
         for i in range(args.frames):
             hr = jnp.asarray(random_image(100 + i, args.hw * args.scale,
                                           args.hw * args.scale))
-            yield hr, degrade(hr, args.scale)
+            hr_pending.append(hr)
+            yield degrade(hr, args.scale)
 
     psnrs = []
-    for i, (hr, lr) in enumerate(frames()):
-        res = engine.serve(lr)
-        psnrs.append(float(psnr_y(res.image, hr)))
-        line = f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  thresholds={res.thresholds}"
-        if res.shard_counts is not None:
+    # stream() rather than per-frame serve(): under --dispatch fused with
+    # --inflight >= 2 this is the double-buffered async executor
+    for i, res in enumerate(engine.stream(lr_stream())):
+        psnrs.append(float(psnr_y(res.image, hr_pending.popleft())))
+        line = (f"frame {i}: PSNR_Y {psnrs[-1]:.2f} dB  "
+                f"thresholds={res.thresholds}")
+        if res.dispatch == "fused" and any(res.spill_counts):
+            line += f"  spilled={res.spill_counts}"
+        if res.shard_counts is not None and res.shard_deadline_missed is not None:
             line += (f"  shard_c54={[c[2] for c in res.shard_counts]}"
                      f"  demoted={list(res.shard_deadline_missed)}")
         print(line)

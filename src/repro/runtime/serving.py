@@ -77,8 +77,14 @@ class FrameServer:
 
     @property
     def stats(self) -> List[FrameStats]:
-        new = self.engine.stats[self._mirrored:]
-        self._mirrored = len(self.engine.stats)
+        # engine.stats is a bounded deque now (plan.stats_window); mirror by
+        # the engine's monotone append counter, not by deque length — once
+        # the deque rotates at its maxlen, length stops moving while records
+        # keep arriving. Frames that rotated out between refreshes are gone
+        # (serve_frame refreshes eagerly, so that needs a window-sized gap).
+        fresh = self.engine.stats_total - self._mirrored
+        new = list(self.engine.stats)[-fresh:] if fresh > 0 else []
+        self._mirrored = self.engine.stats_total
         self._stats.extend(FrameStats(r.counts, r.mac_saving, r.latency_s,
                                       r.thresholds, r.deadline_missed)
                            for r in new)
@@ -88,7 +94,7 @@ class FrameServer:
     def stats(self, value: List[FrameStats]) -> None:
         # old code allowed `server.stats = []` to reset a stats window
         self._stats = value if isinstance(value, list) else list(value)
-        self._mirrored = len(self.engine.stats)
+        self._mirrored = self.engine.stats_total
 
     def serve_frame(self, frame) -> Any:
         image = self.engine.serve(frame).image

@@ -1,0 +1,363 @@
+"""Fused single-dispatch frame graph (`ExecutionPlan.dispatch = "fused"`).
+
+Contract under test (docs/api.md "Dispatch modes & async streaming"):
+
+  * with adequate capacity, fused in-graph routing is IDENTICAL to host
+    dispatch — same ids, same counts (golden mixed frame pins), allclose
+    images across backends, quant modes and shard counts;
+  * capacity overflow spills deterministically (raster order, priciest
+    subnet first, cascading toward the dense bilinear floor);
+  * the async double-buffered stream returns the same results as the
+    synchronous fused stream, in frame order;
+  * warmup()/FrameResult.compiled bookkeeping and the bounded stats window.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExecutionPlan, FrameResult, SREngine
+from repro.core import subnet_policy as sp
+from repro.core.adaptive import SwitchingConfig
+from repro.core.patching import get_geometry
+from repro.core.pipeline import (capacity_route, fused_frame_forward,
+                                 snap_capacity)
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig
+
+CFG = ESSRConfig(scale=2)
+
+#: Same fixed mixed-content frame + routing pins as
+#: tests/test_quant_conformance.py — all three buckets populated.
+GOLDEN_COUNTS = (10, 2, 13)
+
+
+def _golden_frame(hw: int = 128, seed: int = 1234):
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, hw), jnp.linspace(0, 1, hw),
+                          indexing="ij")
+    smooth = jnp.stack([yy, xx, (yy + xx) / 2], axis=-1)
+    tex = degrade(jnp.asarray(random_image(seed, 2 * hw, 2 * hw)), 2)
+    return jnp.where((yy < 0.5)[..., None], smooth, tex)
+
+
+def _stable_switching() -> SwitchingConfig:
+    """Frozen thresholds: stream tests compare dispatch paths, and moving
+    thresholds would change routing between the compared runs."""
+    return SwitchingConfig(frame_high=10 ** 9, frame_low=0)
+
+
+# ---------------------------------------------------------------------------
+# routing equality + image allclose vs host dispatch
+# ---------------------------------------------------------------------------
+
+def test_fused_routing_matches_host_on_golden_frame():
+    frame = _golden_frame()
+    host = SREngine.from_config(CFG, seed=1)
+    fused = SREngine.from_config(CFG, seed=1,
+                                 plan=ExecutionPlan(dispatch="fused"))
+    rh, rf = host.upscale(frame), fused.upscale(frame)
+    assert rh.dispatch == "host" and rf.dispatch == "fused"
+    assert rh.counts == GOLDEN_COUNTS and rf.counts == GOLDEN_COUNTS
+    np.testing.assert_array_equal(np.asarray(rf.ids), np.asarray(rh.ids))
+    np.testing.assert_allclose(np.asarray(rf.scores), np.asarray(rh.scores),
+                               rtol=1e-5, atol=1e-5)
+    assert rf.spill_counts == (0, 0, 0)
+    np.testing.assert_allclose(np.asarray(rf.image), np.asarray(rh.image),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("quant", [None, "int8"])
+def test_fused_allclose_across_backends_and_quant(backend, quant):
+    frame = _golden_frame()
+    plan = ExecutionPlan(quant=quant)
+    host = SREngine.from_config(CFG, seed=1, backend=backend, plan=plan)
+    fused = SREngine.from_config(CFG, seed=1, backend=backend,
+                                 plan=plan.replace(dispatch="fused"))
+    rh, rf = host.upscale(frame), fused.upscale(frame)
+    assert rf.backend == rh.backend            # honest labels either way
+    np.testing.assert_array_equal(np.asarray(rf.ids), np.asarray(rh.ids))
+    np.testing.assert_allclose(np.asarray(rf.image), np.asarray(rh.image),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_fused_allclose_under_sharding(shards):
+    if shards > jax.device_count():
+        pytest.skip(f"{jax.device_count()} device(s) visible; run under "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    frame = _golden_frame()
+    single = SREngine.from_config(CFG, seed=1)
+    fused = SREngine.from_config(
+        CFG, seed=1, plan=ExecutionPlan(dispatch="fused", shards=shards))
+    r1, rf = single.upscale(frame), fused.upscale(frame)
+    assert rf.shards == shards
+    np.testing.assert_array_equal(np.asarray(rf.ids), np.asarray(r1.ids))
+    np.testing.assert_allclose(np.asarray(rf.image), np.asarray(r1.image),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_fp32_bit_exact_vs_host():
+    """Same weights, same routed patches, same per-subnet executables: the
+    fused graph is not merely allclose — on the ref backend it reproduces
+    host dispatch exactly (both run `_forward_width_jit` inlined)."""
+    frame = _golden_frame()
+    host = SREngine.from_config(CFG, seed=1)
+    fused = SREngine.from_config(CFG, seed=1,
+                                 plan=ExecutionPlan(dispatch="fused"))
+    np.testing.assert_array_equal(np.asarray(fused.upscale(frame).image),
+                                  np.asarray(host.upscale(frame).image))
+
+
+# ---------------------------------------------------------------------------
+# capacity / spill semantics
+# ---------------------------------------------------------------------------
+
+def test_snap_capacity():
+    assert snap_capacity(0) == 0
+    assert snap_capacity(5) == 8
+    assert snap_capacity(9) == 16
+    assert snap_capacity(9, n_total=12) == 12      # clamps to the frame
+    assert snap_capacity(3, buckets=(4, 32)) == 4
+
+
+def test_capacity_route_cascade_deterministic():
+    ids = jnp.asarray(np.array([2, 2, 1, 2, 0, 2, 1, 2], np.int32))
+    eff, spills = capacity_route(ids, (0, 3, 2))
+    # C54 keeps its first 2 in raster order; 3 overflow -> C27 candidates
+    # are [native 1s + spilled 2s] in raster order, capacity 3 keeps the
+    # first 3, the rest land on the bilinear floor
+    np.testing.assert_array_equal(
+        np.asarray(eff), [2, 2, 1, 1, 0, 1, 0, 0])
+    np.testing.assert_array_equal(np.asarray(spills), [0, 2, 3])
+
+
+def test_fused_spill_pinned_capacity_and_determinism():
+    frame = _golden_frame()
+    host = SREngine.from_config(CFG, seed=1)
+    rh = host.upscale(frame)
+    pin = SREngine.from_config(
+        CFG, seed=1,
+        plan=ExecutionPlan(dispatch="fused", capacity=(0, 8, 4)))
+    r1, r2 = pin.upscale(frame), pin.upscale(frame)
+    # C54 wants 13, keeps 4 (raster order), 9 spill into C27; C27 holds
+    # its native 2 + 6 spilled, 3 overflow to bilinear
+    assert r1.spill_counts == (0, 3, 9)
+    assert r1.counts == (13, 8, 4)
+    assert sum(r1.counts) == sum(rh.counts)
+    # deterministic: the same frame spills identically every time, and the
+    # served C54 patches are exactly the first 4 of the host-routed C54s
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.image), np.asarray(r2.image))
+    host_c54 = np.flatnonzero(np.asarray(rh.ids) == sp.C54)
+    fused_c54 = np.flatnonzero(np.asarray(r1.ids) == sp.C54)
+    np.testing.assert_array_equal(fused_c54, host_c54[:4])
+
+
+def test_fused_capacity_grows_after_spill():
+    """Auto capacity: a frame that routes past the probed profile spills
+    once (honest FrameResult), and the engine regrows the profile so the
+    next identical frame routes without demotion."""
+    smooth = jnp.stack(jnp.meshgrid(jnp.linspace(0, 1, 128),
+                                    jnp.linspace(0, 1, 128),
+                                    indexing="ij")[:1] * 3, axis=-1)
+    busy = _golden_frame()
+    eng = SREngine.from_config(CFG, seed=1,
+                               plan=ExecutionPlan(dispatch="fused"))
+    r_smooth = eng.upscale(smooth)              # probe: everything bilinear
+    assert r_smooth.counts[sp.C54] == 0
+    r_busy = eng.upscale(busy)                  # exceeds the probed profile
+    assert any(r_busy.spill_counts)
+    r_again = eng.upscale(busy)                 # profile regrew: no spill
+    assert r_again.spill_counts == (0, 0, 0)
+    assert r_again.counts == GOLDEN_COUNTS
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        ExecutionPlan(dispatch="gpu")
+    with pytest.raises(ValueError):
+        ExecutionPlan(inflight=0)
+    with pytest.raises(ValueError):
+        ExecutionPlan(stats_window=0)
+    with pytest.raises(ValueError):
+        ExecutionPlan(capacity=(0, -1, 4))
+    p = ExecutionPlan(dispatch="fused", capacity=[0, 8, 4], inflight=2)
+    assert p.capacity == (0, 8, 4)              # normalized to a tuple
+    with pytest.raises(ValueError):             # must match the subnet trio
+        SREngine.from_config(CFG, plan=ExecutionPlan(
+            dispatch="fused", capacity=(0, 8))).upscale(_golden_frame())
+
+
+def test_fused_falls_back_to_host_for_other_modes():
+    frame = _golden_frame()
+    eng = SREngine.from_config(CFG, seed=1,
+                               plan=ExecutionPlan(dispatch="fused"))
+    r = eng.upscale(frame, mode="all_patches", width=CFG.channels)
+    assert r.dispatch == "host" and r.spill_counts is None
+    ids = np.zeros(r.n_patches, np.int64)
+    r2 = eng.upscale(frame, ids_override=ids)
+    assert r2.dispatch == "host"
+    r3 = eng.reference(frame)
+    assert r3.dispatch == "host"
+
+
+# ---------------------------------------------------------------------------
+# streaming: sync == async, ordering, control
+# ---------------------------------------------------------------------------
+
+def test_async_stream_matches_sync_stream():
+    """Double-buffered fused streaming returns exactly the synchronous
+    results, in frame order (capacity pinned + thresholds frozen, so the
+    one-frame control delay has nothing to act on — the documented setting
+    where async is a pure latency-hiding change)."""
+    frames = [_golden_frame(seed=1234 + i) for i in range(4)]
+    mk = lambda inflight: SREngine.from_config(
+        CFG, seed=1, switching=_stable_switching(),
+        plan=ExecutionPlan(dispatch="fused", capacity=(0, 16, 16),
+                           inflight=inflight))
+    sync_r = list(mk(1).stream(frames))
+    async_r = list(mk(3).stream(frames))
+    assert len(sync_r) == len(async_r) == 4
+    for a, b in zip(sync_r, async_r):
+        assert a.counts == b.counts and a.spill_counts == b.spill_counts
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.image),
+                                      np.asarray(b.image))
+
+
+def test_async_control_delay_is_one_frame():
+    """With adaptation ON, the async switcher reads counts one frame late:
+    after a C54-heavy frame, sync raises thresholds before serving the next
+    frame, async only after it — the documented inflight-1 control delay."""
+    frames = [_golden_frame(seed=7), _golden_frame(seed=8),
+              _golden_frame(seed=9)]
+    trig = SwitchingConfig(frame_high=5, frame_low=0)   # golden C54=13 > 5
+    mk = lambda inflight: SREngine.from_config(
+        CFG, seed=1, switching=trig,
+        plan=ExecutionPlan(dispatch="fused", capacity=(0, 32, 32),
+                           inflight=inflight))
+    sync_r = list(mk(1).stream(frames))
+    async_r = list(mk(2).stream(frames))
+    # frame 0 routes identically (same initial thresholds), and its C54
+    # count trips the trim: sync raises thresholds BEFORE serving frame 1
+    assert sync_r[0].counts == async_r[0].counts
+    t1, t2 = sp.DEFAULT_T1, sp.DEFAULT_T2
+    assert sync_r[0].thresholds == (t1 + trig.t1_step, t2 + trig.t2_step)
+    # async frame 1 was launched before frame 0 materialized: it still
+    # routed at the INITIAL thresholds — exactly what a plain upscale of
+    # that frame (plan thresholds == initial) produces
+    ref = SREngine.from_config(
+        CFG, seed=1, plan=ExecutionPlan(dispatch="fused",
+                                        capacity=(0, 32, 32)))
+    assert async_r[1].counts == ref.upscale(frames[1]).counts
+
+
+def test_fused_stream_records_and_summary():
+    frames = [_golden_frame()] * 3
+    eng = SREngine.from_config(
+        CFG, seed=1, switching=_stable_switching(),
+        plan=ExecutionPlan(dispatch="fused", inflight=2, stats_window=2))
+    out = list(eng.stream(frames))
+    assert all(isinstance(r, FrameResult) for r in out)
+    assert len(eng.stats) == 2                  # bounded window
+    s = eng.summary()
+    assert s["frames"] == 2 and s["stats_window"] == 2
+    assert s["spilled_patches"] == [0, 0, 0]
+    # compact records hold no images/ids/scores
+    assert all(r.image is None and r.ids is None for r in eng.stats)
+
+
+def test_stream_enforces_c54_budget_even_when_seeded_by_upscale():
+    """The in-graph C54 ceiling must hold no matter which path seeded the
+    capacity profile: the cache stays unclamped, the stream clamps per
+    call — and a stream-clamped serve must not force spills on later
+    single-frame upscale() calls (review regression)."""
+    budget = SwitchingConfig(c54_per_sec_budget=4 * 30, fps=30,
+                             frame_high=10 ** 9, frame_low=0)   # 4 C54/frame
+    eng = SREngine.from_config(CFG, seed=1, switching=budget,
+                               plan=ExecutionPlan(dispatch="fused"))
+    r_up = eng.upscale(_golden_frame())     # seeds the unclamped profile
+    assert r_up.counts == GOLDEN_COUNTS and r_up.spill_counts == (0, 0, 0)
+    r_st = eng.serve(_golden_frame())       # streamed: ceiling 4 C54/frame
+    assert r_st.counts[sp.C54] <= 4
+    assert r_st.spill_counts[sp.C54] == GOLDEN_COUNTS[sp.C54] - 4
+    r_up2 = eng.upscale(_golden_frame())    # full profile again, no spill
+    assert r_up2.counts == GOLDEN_COUNTS and r_up2.spill_counts == (0, 0, 0)
+    # a PINNED profile is the operator override: served verbatim even when
+    # streaming — its C54 entry replaces the budget-derived ceiling
+    # (documented on ExecutionPlan.capacity)
+    pin = SREngine.from_config(
+        CFG, seed=1, switching=budget,
+        plan=ExecutionPlan(dispatch="fused", capacity=(0, 16, 16)))
+    r_pin = pin.serve(_golden_frame())
+    assert r_pin.counts == GOLDEN_COUNTS and r_pin.spill_counts == (0, 0, 0)
+
+
+def test_frame_server_mirror_survives_window_rotation():
+    """The deprecated FrameServer shim mirrors engine.stats by the monotone
+    append counter: records must keep flowing after the bounded deque
+    rotates at stats_window (review regression)."""
+    from repro.models.essr import init_essr
+    from repro.runtime.serving import FrameServer
+    params = init_essr(jax.random.PRNGKey(0), CFG)
+    with pytest.warns(DeprecationWarning):
+        server = FrameServer(params, CFG, _stable_switching())
+    server.engine = SREngine(params, CFG,
+                             plan=ExecutionPlan(stats_window=2),
+                             switching=_stable_switching())
+    frame = _golden_frame()
+    for _ in range(4):
+        server.serve_frame(frame)
+    assert len(server.engine.stats) == 2          # deque rotated
+    assert server.engine.stats_total == 4
+    assert len(server.stats) == 4                 # mirror kept every frame
+    assert server.summary()["frames"] == 4
+
+
+# ---------------------------------------------------------------------------
+# warmup / compiled bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_warmup_and_compiled_flag():
+    eng = SREngine.from_config(CFG, seed=1,
+                               plan=ExecutionPlan(dispatch="fused"))
+    w = eng.warmup((128, 128))
+    assert w.compiled is False and w.dispatch == "fused"
+    assert all(c > 0 for c in w.counts)        # synthetic frame hits all 3
+    assert len(eng.stats) == 0                 # warmup never pollutes stats
+    w2 = eng.warmup((128, 128))
+    assert w2.compiled is True                 # same shape+profile: warm
+
+
+def test_summary_excludes_warmup_frames():
+    frames = [_golden_frame()] * 3
+    eng = SREngine.from_config(CFG, seed=1, switching=_stable_switching(),
+                               plan=ExecutionPlan(dispatch="fused",
+                                                  capacity=(0, 16, 16)))
+    out = list(eng.stream(frames))
+    assert out[0].compiled is False and out[1].compiled is True
+    s = eng.summary()
+    assert s["warmup_frames_excluded"] == 1
+    steady = [r.latency_s for r in out[1:]]
+    assert abs(s["mean_latency_s"] - float(np.mean(steady))) < 1e-9
+
+
+def test_direct_fused_frame_forward():
+    """The low-level entry: one call, five device arrays, equal to the
+    host reference pipeline."""
+    from repro.core.pipeline import edge_selective_sr
+    from repro.models.essr import init_essr
+    frame = _golden_frame()
+    params = init_essr(jax.random.PRNGKey(1), CFG)
+    ref = edge_selective_sr(params, frame, CFG)
+    g = get_geometry(128, 128, 32, 2, CFG.scale)
+    caps = tuple(snap_capacity(c, n_total=g.n) for c in ref.counts)
+    img, ids, scores, counts, spills = fused_frame_forward(
+        params, frame, CFG, geometry=g, caps=caps)
+    np.testing.assert_array_equal(np.asarray(ids), ref.ids)
+    np.testing.assert_array_equal(np.asarray(counts), list(ref.counts))
+    assert not np.asarray(spills).any()
+    np.testing.assert_allclose(np.asarray(img), np.asarray(ref.image),
+                               rtol=1e-5, atol=1e-5)
