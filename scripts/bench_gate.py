@@ -29,7 +29,14 @@ and fails when the fresh numbers regress past a tolerance band:
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
 
+``--audit`` adds the static-analysis leg in the same invocation: both
+`repro.analysis` passes run and the gate hard-fails on any violation that is
+new vs the committed ``ANALYSIS_baseline.json`` — a graph hazard (host sync,
+recompile leak, nondeterministic scatter) blocks merge exactly like a perf
+regression, because on the serving path it *is* one.
+
     PYTHONPATH=src:. python scripts/bench_gate.py [--tol 0.5] [--shards 1,2,4]
+    PYTHONPATH=src:. python scripts/bench_gate.py --audit
 """
 from __future__ import annotations
 
@@ -42,6 +49,24 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path[:0] = [REPO, os.path.join(REPO, "src")]
 
 COMMITTED = os.path.join(REPO, "BENCH_table11_throughput.json")
+AUDIT_BASELINE = os.path.join(REPO, "ANALYSIS_baseline.json")
+
+
+def run_audit(baseline_path: str, out_json: str) -> list:
+    """The ``--audit`` leg: run both static-analysis passes and return
+    failure strings for every violation new vs the committed baseline."""
+    from repro.analysis.ast_lint import run_ast_lint
+    from repro.analysis.jaxpr_audit import run_jaxpr_audit
+    from repro.analysis.report import Report
+
+    report = Report(run_ast_lint(REPO))
+    report.extend(run_jaxpr_audit())
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    report.to_json(out_json)
+    baseline = (Report.from_json(baseline_path)
+                if os.path.exists(baseline_path) else Report())
+    return [f"audit: new {v.code} at {v.site}: {v.message}"
+            for v in report.new_vs(baseline)]
 
 
 def compare(committed: dict, fresh: dict, tol: float,
@@ -161,6 +186,10 @@ def main() -> int:
     ap.add_argument("--update", action="store_true",
                     help="rewrite the committed JSON from this run instead "
                          "of gating (for refreshing the baseline)")
+    ap.add_argument("--audit", action="store_true",
+                    help="also run the static-analysis passes and fail on "
+                         "any new violation vs ANALYSIS_baseline.json")
+    ap.add_argument("--audit-baseline", default=AUDIT_BASELINE)
     args = ap.parse_args()
 
     with open(args.committed) as f:
@@ -176,6 +205,13 @@ def main() -> int:
         return 0
 
     fails = compare(committed, fresh, args.tol, snr_tol_db=args.snr_tol_db)
+    if args.audit:
+        audit_out = os.path.join(os.path.dirname(args.out),
+                                 "ANALYSIS_report.json")
+        audit_fails = run_audit(args.audit_baseline, audit_out)
+        print(f"bench-gate: audit {'FAIL' if audit_fails else 'OK'} "
+              f"({len(audit_fails)} new violation(s), report={audit_out})")
+        fails.extend(audit_fails)
     head = fresh["frames"]["smooth_all_bilinear"]["after_vectorized"]["fps"]
     print(f"bench-gate: fresh smooth-frame fps={head:.3f} "
           f"(committed {committed['frames']['smooth_all_bilinear']['after_vectorized']['fps']:.3f}), "

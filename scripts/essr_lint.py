@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""ESSR static auditor CLI: jaxpr graph audit + repo AST lint.
+
+Usage:
+  python scripts/essr_lint.py --all              # both passes, gate vs baseline
+  python scripts/essr_lint.py --ast              # AST lint only (fast, no jax)
+  python scripts/essr_lint.py --jaxpr            # jaxpr audit only
+  python scripts/essr_lint.py --all --json out.json
+  python scripts/essr_lint.py --all --fix-baseline
+
+Exit code is 0 iff the run has no *new* violations vs the committed baseline
+(`ANALYSIS_baseline.json`, expected to be zero-violation). `--no-baseline`
+gates on the absolute count instead. `--fix-baseline` rewrites the baseline
+from this run and exits 0 — the escape hatch for local iteration, reviewed
+like any other committed artifact.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "ANALYSIS_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run both passes (default when no pass is chosen)")
+    ap.add_argument("--jaxpr", action="store_true", help="jaxpr audit pass")
+    ap.add_argument("--ast", action="store_true", help="AST lint pass")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the machine-readable report here")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline to diff against (default: "
+                         f"{os.path.relpath(DEFAULT_BASELINE, REPO_ROOT)})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline; fail on any violation at all")
+    ap.add_argument("--fix-baseline", action="store_true",
+                    help="rewrite the baseline from this run and exit 0")
+    ap.add_argument("--max-const-bytes", type=int, default=None,
+                    help="ESSR104 byte budget for baked graph constants")
+    args = ap.parse_args(argv)
+
+    run_jaxpr = args.jaxpr or args.all or not (args.jaxpr or args.ast)
+    run_ast = args.ast or args.all or not (args.jaxpr or args.ast)
+
+    from repro.analysis.report import Report
+
+    report = Report()
+    if run_ast:
+        from repro.analysis.ast_lint import run_ast_lint
+        report.extend(run_ast_lint(REPO_ROOT))
+    if run_jaxpr:
+        from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        kwargs = {}
+        if args.max_const_bytes is not None:
+            kwargs["const_budget"] = args.max_const_bytes
+        report.extend(run_jaxpr_audit(**kwargs))
+
+    print(report.render())
+    if args.json:
+        d = os.path.dirname(os.path.abspath(args.json))
+        os.makedirs(d, exist_ok=True)
+        report.to_json(args.json)
+        print(f"wrote {args.json}")
+
+    if args.fix_baseline:
+        report.to_json(args.baseline)
+        print(f"baseline rewritten: {args.baseline} "
+              f"({len(report.violations)} violation(s))")
+        return 0
+
+    if args.no_baseline or not os.path.exists(args.baseline):
+        if not args.no_baseline:
+            print(f"note: no baseline at {args.baseline}; gating on "
+                  f"absolute count")
+        return 1 if report.violations else 0
+
+    baseline = Report.from_json(args.baseline)
+    new = report.new_vs(baseline)
+    if new:
+        print(f"FAIL: {len(new)} new violation(s) vs baseline "
+              f"{os.path.relpath(args.baseline, REPO_ROOT)}:")
+        for v in new:
+            print(f"  {v.code} {v.site}: {v.message}")
+        return 1
+    print(f"ok: no new violations vs baseline "
+          f"({len(baseline.violations)} baselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== static audit (jaxpr graph audit + AST lint vs baseline) =="
+python scripts/essr_lint.py --all
+
 echo "== pallas-backend frame smoke (interpret fallback on CPU) =="
 python - <<'PY'
 import numpy as np

@@ -1,0 +1,37 @@
+"""Static analysis for the ESSR repro: jaxpr graph audit + repo AST lint.
+
+Two passes over two different artifacts:
+
+- :mod:`repro.analysis.jaxpr_audit` traces the real engine entry points and
+  walks the jaxprs for graph hazards (ESSR1xx), including the recompile-leak
+  re-trace check.
+- :mod:`repro.analysis.ast_lint` lints the source tree for repo conventions
+  (ESSR2xx).
+
+``scripts/essr_lint.py`` is the CLI; ``scripts/bench_gate.py --audit`` gates
+on new violations vs the committed ``ANALYSIS_baseline.json``.
+"""
+from repro.analysis.ast_lint import lint_file, lint_source, run_ast_lint
+from repro.analysis.jaxpr_audit import (
+    audit_jaxpr,
+    audit_recompile_leaks,
+    check_recompile,
+    entry_point_jaxprs,
+    run_jaxpr_audit,
+)
+from repro.analysis.report import PASS_OF_RULE, RULES, Report, Violation
+
+__all__ = [
+    "PASS_OF_RULE",
+    "RULES",
+    "Report",
+    "Violation",
+    "audit_jaxpr",
+    "audit_recompile_leaks",
+    "check_recompile",
+    "entry_point_jaxprs",
+    "lint_file",
+    "lint_source",
+    "run_ast_lint",
+    "run_jaxpr_audit",
+]

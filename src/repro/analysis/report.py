@@ -1,0 +1,144 @@
+"""Violation records + machine-readable reports for the ESSR static auditor.
+
+One `Violation` is one (rule code, site) hazard; a `Report` aggregates the
+violations of an audit run into the JSON shape the CLI emits, the committed
+baseline (`ANALYSIS_baseline.json`) stores, and `scripts/bench_gate.py
+--audit` diffs against. The rule catalog below is the single source of rule
+codes and one-line descriptions — `docs/api.md` documents each at length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, List, Tuple
+
+#: Rule catalog: code -> one-line description. ESSR1xx = jaxpr audit (graph
+#: hazards of the traced entry points), ESSR2xx = AST lint (repo conventions
+#: over the source tree).
+RULES: Dict[str, str] = {
+    "ESSR101": "host callback/transfer primitive inside a traced graph",
+    "ESSR102": "fp64/complex128 value, f64 promotion, or weak-typed graph "
+               "output",
+    "ESSR103": "scatter without a determinism guarantee (mode=None, or "
+               "set-semantics scatter with non-unique indices)",
+    "ESSR104": "oversized constant baked into a traced graph",
+    "ESSR105": "recompile leak: a traced-argument perturbation re-lowered "
+               "the executable",
+    "ESSR201": "free-function inference entry point outside repro.api",
+    "ESSR202": "numpy host op inside a traced body",
+    "ESSR203": "wall-clock (time module) call inside a traced body",
+    "ESSR204": "host sync (.block_until_ready()/jax.device_get) inside a "
+               "traced body",
+    "ESSR205": "mutable or unhashable field on a frozen plan/config "
+               "dataclass",
+}
+
+#: Which analysis pass owns each rule (drives the per-pass report sections).
+PASS_OF_RULE: Dict[str, str] = {
+    code: ("jaxpr" if code.startswith("ESSR1") else "ast") for code in RULES
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule hit at one site.
+
+    ``site`` is ``<relpath>:<line>`` for AST findings and
+    ``entrypoint:<name>`` for jaxpr findings (graphs have no source line).
+    """
+    code: str
+    site: str
+    message: str
+
+    def __post_init__(self):
+        if self.code not in RULES:
+            raise ValueError(f"unknown rule code {self.code!r}; "
+                             f"known: {sorted(RULES)}")
+
+    @property
+    def pass_name(self) -> str:
+        return PASS_OF_RULE[self.code]
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        """Baseline identity: a violation is "new" when no committed
+        violation shares its (code, site). Messages carry run-varying
+        detail (byte counts, dtypes) and are excluded on purpose."""
+        return (self.code, self.site)
+
+    def to_dict(self) -> Dict[str, str]:
+        return {"code": self.code, "site": self.site,
+                "message": self.message, "pass": self.pass_name}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, str]) -> "Violation":
+        return cls(code=d["code"], site=d["site"],
+                   message=d.get("message", ""))
+
+
+class Report:
+    """An audit run's violations, with JSON (de)serialization and the
+    baseline diff `bench_gate --audit` gates on."""
+
+    def __init__(self, violations: Iterable[Violation] = ()):
+        self.violations: List[Violation] = list(violations)
+
+    def extend(self, violations: Iterable[Violation]) -> None:
+        self.violations.extend(violations)
+
+    def counts(self) -> Dict[str, int]:
+        """Per-rule violation counts — every catalog rule appears, zero or
+        not, so a consumer can tell "rule ran clean" from "rule unknown"."""
+        out = {code: 0 for code in RULES}
+        for v in self.violations:
+            out[v.code] += 1
+        return out
+
+    def by_pass(self) -> Dict[str, List[Violation]]:
+        out: Dict[str, List[Violation]] = {"jaxpr": [], "ast": []}
+        for v in self.violations:
+            out[v.pass_name].append(v)
+        return out
+
+    def new_vs(self, baseline: "Report") -> List[Violation]:
+        """Violations of this run with no (code, site) match in ``baseline``
+        — the set the audit gate hard-fails on. A shrinking violation list
+        never fails the gate (fixes land freely; regenerate the baseline
+        with ``essr_lint.py --fix-baseline`` to ratchet it down)."""
+        seen = {v.key for v in baseline.violations}
+        return [v for v in self.violations if v.key not in seen]
+
+    def to_dict(self) -> Dict:
+        return {
+            "rules": {code: RULES[code] for code in sorted(RULES)},
+            "counts": self.counts(),
+            "total": len(self.violations),
+            "violations": [v.to_dict() for v in sorted(
+                self.violations, key=lambda v: (v.code, v.site))],
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+            f.write("\n")
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Report":
+        return cls(Violation.from_dict(v) for v in d.get("violations", []))
+
+    @classmethod
+    def from_json(cls, path: str) -> "Report":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def render(self) -> str:
+        """Human-readable summary (the CLI's stdout)."""
+        lines = []
+        for pass_name, vs in self.by_pass().items():
+            lines.append(f"[{pass_name}] {len(vs)} violation(s)")
+            for v in sorted(vs, key=lambda v: (v.code, v.site)):
+                lines.append(f"  {v.code} {v.site}: {v.message}")
+        counts = {c: n for c, n in self.counts().items() if n}
+        lines.append(f"total: {len(self.violations)} violation(s)"
+                     + (f" {counts}" if counts else ""))
+        return "\n".join(lines)

@@ -176,9 +176,10 @@ def _fuse_separable(sr, y_idx, x_idx, y_cnt, x_cnt, *, n_y: int, n_x: int,
     t = sr.reshape(n_y, n_x, ps, ps, c).transpose(0, 2, 1, 3, 4)
     t = t.reshape(n_y * ps, n_x, ps, c)
     t = t * wy[:, None, None, None] * wx.reshape(n_x, ps)[None, :, :, None]
-    acc = jnp.zeros((hh, n_x, ps, c), sr.dtype).at[y_idx].add(t)
+    acc = jnp.zeros((hh, n_x, ps, c), sr.dtype).at[y_idx].add(
+        t, mode="drop")
     return jnp.zeros((hh, wh, c), sr.dtype).at[:, x_idx].add(
-        acc.reshape(hh, n_x * ps, c))
+        acc.reshape(hh, n_x * ps, c), mode="drop")
 
 
 def _index_maps(pos: np.ndarray, patch: int, plane_w: int, scale: int
@@ -316,7 +317,7 @@ def fuse_patches_average(sr_patches: jax.Array, pos_lr: np.ndarray, scale: int,
     lin, cnt = _fusion_maps(pos.tobytes(), len(pos), patch, plane_w, scale,
                             plane_h)
     acc = jnp.zeros((plane_h * scale * plane_w * scale, c), sr_patches.dtype)
-    acc = acc.at[lin].add(sr_patches.reshape(-1, c))
+    acc = acc.at[lin].add(sr_patches.reshape(-1, c), mode="drop")
     out = (acc / cnt.astype(sr_patches.dtype)
            ).reshape(plane_h * scale, plane_w * scale, c)
     return out[:out_hw[0], :out_hw[1]]
