@@ -29,11 +29,14 @@ and fails when the fresh numbers regress past a tolerance band:
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
 
-``--audit`` adds the static-analysis leg in the same invocation: both
-`repro.analysis` passes run and the gate hard-fails on any violation that is
-new vs the committed ``ANALYSIS_baseline.json`` — a graph hazard (host sync,
-recompile leak, nondeterministic scatter) blocks merge exactly like a perf
-regression, because on the serving path it *is* one.
+``--audit`` adds the static-analysis leg in the same invocation: all four
+`repro.analysis` passes run (jaxpr audit, AST lint, interval range
+certification, static cost model) and the gate hard-fails on any violation
+new vs the committed ``ANALYSIS_baseline.json`` — a graph hazard or an
+ESSR3xx overflow proof-failure blocks merge exactly like a perf regression —
+plus any quantitative regression of the baselined metrics: static MAC/HBM
+traffic growing past ``--traffic-tol``, or any fused group's minimal
+accumulator bit-width growing (overflow headroom shrinking).
 
     PYTHONPATH=src:. python scripts/bench_gate.py [--tol 0.5] [--shards 1,2,4]
     PYTHONPATH=src:. python scripts/bench_gate.py --audit
@@ -52,21 +55,39 @@ COMMITTED = os.path.join(REPO, "BENCH_table11_throughput.json")
 AUDIT_BASELINE = os.path.join(REPO, "ANALYSIS_baseline.json")
 
 
-def run_audit(baseline_path: str, out_json: str) -> list:
-    """The ``--audit`` leg: run both static-analysis passes and return
-    failure strings for every violation new vs the committed baseline."""
+def run_audit(baseline_path: str, out_json: str,
+              traffic_tol: float = 0.10) -> list:
+    """The ``--audit`` leg: run all four static-analysis passes and return
+    failure strings for (a) every violation new vs the committed baseline —
+    including the range certifier's ESSR3xx overflow/bit-width proofs — and
+    (b) every quantitative regression of the range/cost metrics sections:
+    static MACs or HBM bytes growing past ``traffic_tol``, any fused group's
+    minimal accumulator bit-width growing (overflow headroom shrinking), or
+    a baselined entry point/group losing coverage. Static costs are
+    structural (shape/dtype only), so this leg is machine-portable at a
+    tight tolerance, unlike the measured-fps bands above."""
     from repro.analysis.ast_lint import run_ast_lint
+    from repro.analysis.cost_model import run_cost_audit
     from repro.analysis.jaxpr_audit import run_jaxpr_audit
-    from repro.analysis.report import Report
+    from repro.analysis.range_infer import run_range_audit
+    from repro.analysis.report import Report, gate_metrics
 
     report = Report(run_ast_lint(REPO))
     report.extend(run_jaxpr_audit())
+    range_violations, bitwidth = run_range_audit()
+    report.extend(range_violations)
+    report.merge_metrics("bitwidth", bitwidth)
+    report.merge_metrics("static_costs", run_cost_audit())
     os.makedirs(os.path.dirname(out_json), exist_ok=True)
     report.to_json(out_json)
     baseline = (Report.from_json(baseline_path)
                 if os.path.exists(baseline_path) else Report())
-    return [f"audit: new {v.code} at {v.site}: {v.message}"
-            for v in report.new_vs(baseline)]
+    fails = [f"audit: new {v.code} at {v.site}: {v.message}"
+             for v in report.new_vs(baseline)]
+    fails.extend(f"audit: {msg}"
+                 for msg in gate_metrics(report, baseline,
+                                         traffic_tol=traffic_tol))
+    return fails
 
 
 def compare(committed: dict, fresh: dict, tol: float,
@@ -190,6 +211,13 @@ def main() -> int:
                     help="also run the static-analysis passes and fail on "
                          "any new violation vs ANALYSIS_baseline.json")
     ap.add_argument("--audit-baseline", default=AUDIT_BASELINE)
+    ap.add_argument("--traffic-tol", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TRAFFIC_TOL",
+                                                 "0.10")),
+                    help="allowed fractional growth of the STATIC per-entry "
+                         "MAC/HBM-byte costs vs the audit baseline (these "
+                         "are structural, not measured, so the band is "
+                         "tight)")
     args = ap.parse_args()
 
     with open(args.committed) as f:
@@ -208,9 +236,10 @@ def main() -> int:
     if args.audit:
         audit_out = os.path.join(os.path.dirname(args.out),
                                  "ANALYSIS_report.json")
-        audit_fails = run_audit(args.audit_baseline, audit_out)
+        audit_fails = run_audit(args.audit_baseline, audit_out,
+                                traffic_tol=args.traffic_tol)
         print(f"bench-gate: audit {'FAIL' if audit_fails else 'OK'} "
-              f"({len(audit_fails)} new violation(s), report={audit_out})")
+              f"({len(audit_fails)} new finding(s), report={audit_out})")
         fails.extend(audit_fails)
     head = fresh["frames"]["smooth_all_bilinear"]["after_vectorized"]["fps"]
     print(f"bench-gate: fresh smooth-frame fps={head:.3f} "

@@ -1,18 +1,26 @@
 #!/usr/bin/env python
-"""ESSR static auditor CLI: jaxpr graph audit + repo AST lint.
+"""ESSR static auditor CLI: jaxpr graph audit + repo AST lint + interval
+range certification + static cost model.
 
 Usage:
-  python scripts/essr_lint.py --all              # both passes, gate vs baseline
+  python scripts/essr_lint.py --all              # every pass, gate vs baseline
   python scripts/essr_lint.py --ast              # AST lint only (fast, no jax)
   python scripts/essr_lint.py --jaxpr            # jaxpr audit only
+  python scripts/essr_lint.py --range            # ESSR3xx range certification
+  python scripts/essr_lint.py --cost             # static MAC/byte cost model
+  python scripts/essr_lint.py --list-rules       # print the rule catalog
+  python scripts/essr_lint.py --all --select ESSR301,ESSR302
+  python scripts/essr_lint.py --all --ignore ESSR104
   python scripts/essr_lint.py --all --json out.json
   python scripts/essr_lint.py --all --fix-baseline
 
 Exit code is 0 iff the run has no *new* violations vs the committed baseline
 (`ANALYSIS_baseline.json`, expected to be zero-violation). `--no-baseline`
 gates on the absolute count instead. `--fix-baseline` rewrites the baseline
-from this run and exits 0 — the escape hatch for local iteration, reviewed
-like any other committed artifact.
+from this run — including the range/cost metrics sections `bench_gate
+--audit` diffs quantitatively — and exits 0; the escape hatch for local
+iteration, reviewed like any other committed artifact. `--select`/`--ignore`
+filter which rule codes can fire (metrics sections are unaffected).
 """
 import argparse
 import os
@@ -24,12 +32,34 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DEFAULT_BASELINE = os.path.join(REPO_ROOT, "ANALYSIS_baseline.json")
 
 
+def _parse_codes(arg, known):
+    if not arg:
+        return None
+    codes = {c.strip().upper() for c in arg.split(",") if c.strip()}
+    unknown = codes - set(known)
+    if unknown:
+        raise SystemExit(f"essr_lint: unknown rule code(s) "
+                         f"{sorted(unknown)}; see --list-rules")
+    return codes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--all", action="store_true",
-                    help="run both passes (default when no pass is chosen)")
+                    help="run every pass (default when no pass is chosen)")
     ap.add_argument("--jaxpr", action="store_true", help="jaxpr audit pass")
     ap.add_argument("--ast", action="store_true", help="AST lint pass")
+    ap.add_argument("--range", action="store_true", dest="range_",
+                    help="interval range certification pass (ESSR3xx)")
+    ap.add_argument("--cost", action="store_true",
+                    help="static MAC/byte cost pass (metrics only)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog (code, pass, description) "
+                         "and exit")
+    ap.add_argument("--select", metavar="CODE[,CODE]",
+                    help="only these rule codes may fire")
+    ap.add_argument("--ignore", metavar="CODE[,CODE]",
+                    help="suppress these rule codes")
     ap.add_argument("--json", metavar="PATH",
                     help="also write the machine-readable report here")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
@@ -41,12 +71,28 @@ def main(argv=None) -> int:
                     help="rewrite the baseline from this run and exit 0")
     ap.add_argument("--max-const-bytes", type=int, default=None,
                     help="ESSR104 byte budget for baked graph constants")
+    ap.add_argument("--bit-budget", type=int, default=None,
+                    help="ESSR302 accumulator bit budget (default 32)")
     args = ap.parse_args(argv)
 
-    run_jaxpr = args.jaxpr or args.all or not (args.jaxpr or args.ast)
-    run_ast = args.ast or args.all or not (args.jaxpr or args.ast)
+    from repro.analysis.report import RULE_REGISTRY, Report
 
-    from repro.analysis.report import Report
+    if args.list_rules:
+        width = max(len(c) for c in RULE_REGISTRY)
+        for code in sorted(RULE_REGISTRY):
+            pass_name, desc = RULE_REGISTRY[code]
+            print(f"{code:<{width}}  [{pass_name}] {desc}")
+        return 0
+
+    chosen = args.jaxpr or args.ast or args.range_ or args.cost
+    run_all = args.all or not chosen
+    run_jaxpr = args.jaxpr or run_all
+    run_ast = args.ast or run_all
+    run_range = args.range_ or run_all
+    run_cost = args.cost or run_all
+
+    select = _parse_codes(args.select, RULE_REGISTRY)
+    ignore = _parse_codes(args.ignore, RULE_REGISTRY) or set()
 
     report = Report()
     if run_ast:
@@ -58,6 +104,22 @@ def main(argv=None) -> int:
         if args.max_const_bytes is not None:
             kwargs["const_budget"] = args.max_const_bytes
         report.extend(run_jaxpr_audit(**kwargs))
+    if run_range:
+        from repro.analysis.range_infer import run_range_audit
+        kwargs = {}
+        if args.bit_budget is not None:
+            kwargs["bit_budget"] = args.bit_budget
+        violations, bitwidth = run_range_audit(**kwargs)
+        report.extend(violations)
+        report.merge_metrics("bitwidth", bitwidth)
+    if run_cost:
+        from repro.analysis.cost_model import run_cost_audit
+        report.merge_metrics("static_costs", run_cost_audit())
+
+    if select is not None or ignore:
+        report.violations = [
+            v for v in report.violations
+            if (select is None or v.code in select) and v.code not in ignore]
 
     print(report.render())
     if args.json:

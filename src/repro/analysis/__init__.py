@@ -1,37 +1,75 @@
-"""Static analysis for the ESSR repro: jaxpr graph audit + repo AST lint.
+"""Static analysis for the ESSR repro: four passes over two artifacts.
 
-Two passes over two different artifacts:
+Over the *traced graphs* of the real engine entry points
+(:func:`repro.analysis.jaxpr_audit.entry_point_specs`):
 
-- :mod:`repro.analysis.jaxpr_audit` traces the real engine entry points and
-  walks the jaxprs for graph hazards (ESSR1xx), including the recompile-leak
-  re-trace check.
-- :mod:`repro.analysis.ast_lint` lints the source tree for repo conventions
-  (ESSR2xx).
+- :mod:`repro.analysis.jaxpr_audit` walks the jaxprs for graph hazards
+  (ESSR1xx), including the recompile-leak re-trace check.
+- :mod:`repro.analysis.range_infer` abstract-interprets the same jaxprs over
+  a mixed concrete/interval domain and certifies the integer datapath
+  (ESSR3xx): overflow proofs, per-fused-group minimal accumulator
+  bit-widths vs the paper's 24-bit chain, degenerate quant scales.
+- :mod:`repro.analysis.cost_model` prices the same jaxprs statically:
+  per-entry MACs, HBM bytes, arithmetic intensity — the static counterpart
+  of ``launch/roofline.py``, deterministic enough to gate in CI.
 
-``scripts/essr_lint.py`` is the CLI; ``scripts/bench_gate.py --audit`` gates
-on new violations vs the committed ``ANALYSIS_baseline.json``.
+Over the *source tree*:
+
+- :mod:`repro.analysis.ast_lint` lints for repo conventions (ESSR2xx).
+
+:data:`repro.analysis.report.RULE_REGISTRY` is the single source of rule
+codes/ownership/descriptions. ``scripts/essr_lint.py`` is the CLI;
+``scripts/bench_gate.py --audit`` gates on new violations *and* on metric
+regressions (:func:`repro.analysis.report.gate_metrics`) vs the committed
+``ANALYSIS_baseline.json``.
 """
 from repro.analysis.ast_lint import lint_file, lint_source, run_ast_lint
+from repro.analysis.cost_model import price_jaxpr, run_cost_audit
 from repro.analysis.jaxpr_audit import (
     audit_jaxpr,
     audit_recompile_leaks,
     check_recompile,
     entry_point_jaxprs,
+    entry_point_specs,
     run_jaxpr_audit,
 )
-from repro.analysis.report import PASS_OF_RULE, RULES, Report, Violation
+from repro.analysis.range_infer import (
+    Interval,
+    check_quant_scales,
+    infer_ranges,
+    run_range_audit,
+)
+from repro.analysis.report import (
+    PASS_OF_RULE,
+    RULE_REGISTRY,
+    RULES,
+    Report,
+    Violation,
+    gate_metrics,
+    rules_markdown,
+)
 
 __all__ = [
     "PASS_OF_RULE",
+    "RULE_REGISTRY",
     "RULES",
+    "Interval",
     "Report",
     "Violation",
     "audit_jaxpr",
     "audit_recompile_leaks",
+    "check_quant_scales",
     "check_recompile",
     "entry_point_jaxprs",
+    "entry_point_specs",
+    "gate_metrics",
+    "infer_ranges",
     "lint_file",
     "lint_source",
+    "price_jaxpr",
+    "rules_markdown",
     "run_ast_lint",
+    "run_cost_audit",
     "run_jaxpr_audit",
+    "run_range_audit",
 ]

@@ -32,6 +32,7 @@ and the shard mesh is a single host device.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Iterator, List, Tuple
 
 import numpy as np
@@ -184,10 +185,41 @@ def check_recompile(fn, args_a: Tuple, args_b: Tuple, entry: str,
 # the audited entry points
 # ---------------------------------------------------------------------------
 
-def _audit_setup():
+@dataclasses.dataclass(frozen=True, eq=False)
+class AuditSetup:
+    """The shared toy-scale audit configuration (see `_audit_setup`)."""
+    cfg: object
+    params: object
+    geom: object
+    frame: jax.Array
+    patches: jax.Array
+    pack: object            # int8 QuantPack
+    pack_fxp10: object      # paper-faithful FXP10 QuantPack
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EntrySpec:
+    """One audited entry point, in the form every analysis pass consumes.
+
+    ``make`` is a lazy thunk returning ``(fn, args)`` — lazy so a broken
+    entry point reports as its own audit failure instead of killing the
+    whole pass. ``abstract`` maps top-level argument positions to the
+    interval the range pass seeds them with (the proof quantifies over these
+    — frames over [0,1], thresholds over their plausible band); every other
+    argument is seeded with its CONCRETE traced value (real weights, real
+    quant codes). ``labels`` is the (backend, quant, dispatch) identity the
+    cost report keys rows by.
+    """
+    name: str
+    make: Callable[[], Tuple[Callable, Tuple]]
+    abstract: Dict[int, Tuple[float, float]]
+    labels: Dict[str, str]
+
+
+def _audit_setup() -> AuditSetup:
     """Small-but-complete audit configuration: a 3-subnet supernet, a
-    64x64 frame (3x3 patch grid with real overlap), and a calibrated int8
-    pack — every routing/fusion/quant feature of the serving graph is
+    64x64 frame (3x3 patch grid with real overlap), and calibrated int8 +
+    fxp10 packs — every routing/fusion/quant feature of the serving graph is
     exercised at toy scale."""
     from repro.core.patching import get_geometry
     from repro.models.essr import ESSRConfig, init_essr
@@ -200,57 +232,97 @@ def _audit_setup():
                          dtype=jnp.float32).reshape(64, 64, 3)
     patches = geom.extract(frame)
     pack = build_quant_pack(params, cfg, "int8", patches)
-    return cfg, params, geom, frame, patches, pack
+    pack_fxp10 = build_quant_pack(params, cfg, "fxp10", patches)
+    return AuditSetup(cfg, params, geom, frame, patches, pack, pack_fxp10)
 
 
-def entry_point_jaxprs() -> Dict[str, Callable[[], ClosedJaxpr]]:
-    """name -> thunk tracing that entry point. Thunks are lazy so a broken
-    entry point reports as its own audit failure instead of killing the
-    whole pass."""
-    cfg, params, geom, frame, patches, pack = _audit_setup()
+#: Seed intervals: frames/patches live in [0,1]; Algorithm-1 thresholds stay
+#: inside the edge-score band (edge scores of [0,1] frames are bounded far
+#: below this).
+_FRAME_IV = (0.0, 1.0)
+_THRESH_IV = (0.0, 512.0)
 
-    def fused() -> ClosedJaxpr:
-        from repro.core.pipeline import fused_frame_fn
-        fn = fused_frame_fn(geom, (0, 4, 4), cfg, "ref", None, None, None)
-        return jax.make_jaxpr(fn)(params, frame, 8.0, 40.0)
 
-    def fused_quant() -> ClosedJaxpr:
-        from repro.core.pipeline import fused_frame_fn
-        fn = fused_frame_fn(geom, (0, 4, 4), cfg, "pallas", True, None, pack)
-        return jax.make_jaxpr(fn)(params, frame, 8.0, 40.0)
+def entry_point_specs() -> Dict[str, EntrySpec]:
+    """Every audited entry point — the (backend, quant, dispatch) matrix the
+    jaxpr audit walks, the range pass certifies, and the cost pass prices."""
+    s = _audit_setup()
+    cfg, params, frame, patches = s.cfg, s.params, s.frame, s.patches
 
-    def sharded() -> ClosedJaxpr:
+    def fused(pack=None, backend="ref", interpret=None):
+        def make():
+            from repro.core.pipeline import fused_frame_fn
+            fn = fused_frame_fn(s.geom, (0, 4, 4), cfg, backend, interpret,
+                                None, pack)
+            return fn, (params, frame, 8.0, 40.0)
+        return make
+
+    def sharded():
         from repro.core.pipeline import _sharded_forward_fn
         from repro.launch.mesh import make_patch_mesh
         fn = _sharded_forward_fn("ref", make_patch_mesh(1), cfg, 8, None,
                                  None)
-        return jax.make_jaxpr(fn)(params, patches)
+        return fn, (params, patches)
 
-    def qconv() -> ClosedJaxpr:
-        from repro.kernels.qconv import essr_forward_qkernels
-        return jax.make_jaxpr(
-            lambda p, x: essr_forward_qkernels(p, x, cfg, width=8, pack=pack,
-                                               interpret=True)
-        )(params, patches)
+    def qconv(pack, ref: bool):
+        def make():
+            from repro.kernels.qconv import (essr_forward_qkernels,
+                                             essr_forward_qref)
+            if ref:
+                fn = lambda p, x: essr_forward_qref(p, x, cfg, width=8,
+                                                    pack=pack)
+            else:
+                fn = lambda p, x: essr_forward_qkernels(
+                    p, x, cfg, width=8, pack=pack, interpret=True)
+            return fn, (params, patches)
+        return make
 
-    def qconv_ref() -> ClosedJaxpr:
-        from repro.kernels.qconv import essr_forward_qref
-        return jax.make_jaxpr(
-            lambda p, x: essr_forward_qref(p, x, cfg, width=8, pack=pack)
-        )(params, patches)
-
-    def edge() -> ClosedJaxpr:
+    def edge():
         from repro.core.edge_score import edge_score
-        return jax.make_jaxpr(edge_score)(patches)
+        return edge_score, (patches,)
 
-    return {
-        "core.pipeline.fused_frame_fn[ref]": fused,
-        "core.pipeline.fused_frame_fn[pallas-int8]": fused_quant,
-        "core.pipeline.sharded_forward": sharded,
-        "kernels.qconv.essr_forward_qkernels[int8]": qconv,
-        "kernels.qconv.essr_forward_qref[int8]": qconv_ref,
-        "core.edge_score.edge_score": edge,
-    }
+    fr, th = _FRAME_IV, _THRESH_IV
+    specs = [
+        EntrySpec("core.pipeline.fused_frame_fn[ref]",
+                  fused(), {1: fr, 2: th, 3: th},
+                  {"backend": "ref", "quant": "none", "dispatch": "fused"}),
+        EntrySpec("core.pipeline.fused_frame_fn[pallas-int8]",
+                  fused(s.pack, "pallas", True), {1: fr, 2: th, 3: th},
+                  {"backend": "pallas", "quant": "int8",
+                   "dispatch": "fused"}),
+        EntrySpec("core.pipeline.sharded_forward",
+                  sharded, {1: fr},
+                  {"backend": "ref", "quant": "none", "dispatch": "sharded"}),
+        EntrySpec("kernels.qconv.essr_forward_qkernels[int8]",
+                  qconv(s.pack, ref=False), {1: fr},
+                  {"backend": "pallas", "quant": "int8", "dispatch": "host"}),
+        EntrySpec("kernels.qconv.essr_forward_qkernels[fxp10]",
+                  qconv(s.pack_fxp10, ref=False), {1: fr},
+                  {"backend": "pallas", "quant": "fxp10",
+                   "dispatch": "host"}),
+        EntrySpec("kernels.qconv.essr_forward_qref[int8]",
+                  qconv(s.pack, ref=True), {1: fr},
+                  {"backend": "ref", "quant": "int8", "dispatch": "host"}),
+        EntrySpec("kernels.qconv.essr_forward_qref[fxp10]",
+                  qconv(s.pack_fxp10, ref=True), {1: fr},
+                  {"backend": "ref", "quant": "fxp10", "dispatch": "host"}),
+        EntrySpec("core.edge_score.edge_score",
+                  edge, {0: fr},
+                  {"backend": "ref", "quant": "none", "dispatch": "host"}),
+    ]
+    return {spec.name: spec for spec in specs}
+
+
+def entry_point_jaxprs() -> Dict[str, Callable[[], ClosedJaxpr]]:
+    """name -> thunk tracing that entry point (the ESSR1xx walk's view of
+    `entry_point_specs`)."""
+    def tracer(spec: EntrySpec) -> Callable[[], ClosedJaxpr]:
+        def thunk() -> ClosedJaxpr:
+            fn, args = spec.make()
+            return jax.make_jaxpr(fn)(*args)
+        return thunk
+    return {name: tracer(spec)
+            for name, spec in entry_point_specs().items()}
 
 
 def audit_recompile_leaks() -> List[Violation]:
@@ -265,7 +337,8 @@ def audit_recompile_leaks() -> List[Violation]:
     """
     from repro.core.pipeline import fused_frame_fn, snap_capacity
 
-    cfg, params, geom, frame, patches, pack = _audit_setup()
+    s = _audit_setup()
+    cfg, params, geom, frame, pack = s.cfg, s.params, s.geom, s.frame, s.pack
     out: List[Violation] = []
 
     caps_a = (0, snap_capacity(3, n_total=geom.n),

@@ -1,42 +1,75 @@
 """Violation records + machine-readable reports for the ESSR static auditor.
 
 One `Violation` is one (rule code, site) hazard; a `Report` aggregates the
-violations of an audit run into the JSON shape the CLI emits, the committed
-baseline (`ANALYSIS_baseline.json`) stores, and `scripts/bench_gate.py
---audit` diffs against. The rule catalog below is the single source of rule
-codes and one-line descriptions — `docs/api.md` documents each at length.
+violations of an audit run — plus the metrics payloads of the range/cost
+passes — into the JSON shape the CLI emits, the committed baseline
+(`ANALYSIS_baseline.json`) stores, and `scripts/bench_gate.py --audit` diffs
+against. The rule registry below is the SINGLE source of rule codes,
+pass ownership, and one-line descriptions: the CLI's ``--list-rules``, the
+baseline's ``"rules"`` table, and the docs catalog check
+(tests/test_analysis.py) all read it, so the three surfaces cannot drift.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Iterable, List, Tuple
+from typing import Any, Dict, Iterable, List, Tuple
 
-#: Rule catalog: code -> one-line description. ESSR1xx = jaxpr audit (graph
-#: hazards of the traced entry points), ESSR2xx = AST lint (repo conventions
-#: over the source tree).
-RULES: Dict[str, str] = {
-    "ESSR101": "host callback/transfer primitive inside a traced graph",
-    "ESSR102": "fp64/complex128 value, f64 promotion, or weak-typed graph "
-               "output",
-    "ESSR103": "scatter without a determinism guarantee (mode=None, or "
-               "set-semantics scatter with non-unique indices)",
-    "ESSR104": "oversized constant baked into a traced graph",
-    "ESSR105": "recompile leak: a traced-argument perturbation re-lowered "
-               "the executable",
-    "ESSR201": "free-function inference entry point outside repro.api",
-    "ESSR202": "numpy host op inside a traced body",
-    "ESSR203": "wall-clock (time module) call inside a traced body",
-    "ESSR204": "host sync (.block_until_ready()/jax.device_get) inside a "
-               "traced body",
-    "ESSR205": "mutable or unhashable field on a frozen plan/config "
-               "dataclass",
+#: Rule registry: code -> (pass, one-line description). ESSR1xx = jaxpr audit
+#: (graph hazards of the traced entry points), ESSR2xx = AST lint (repo
+#: conventions over the source tree), ESSR3xx = range certification (interval
+#: abstract interpretation of the integer datapath).
+RULE_REGISTRY: Dict[str, Tuple[str, str]] = {
+    "ESSR101": ("jaxpr", "host callback/transfer primitive inside a traced "
+                         "graph"),
+    "ESSR102": ("jaxpr", "fp64/complex128 value, f64 promotion, or "
+                         "weak-typed graph output"),
+    "ESSR103": ("jaxpr", "scatter without a determinism guarantee "
+                         "(mode=None, or set-semantics scatter with "
+                         "non-unique indices)"),
+    "ESSR104": ("jaxpr", "oversized constant baked into a traced graph"),
+    "ESSR105": ("jaxpr", "recompile leak: a traced-argument perturbation "
+                         "re-lowered the executable"),
+    "ESSR201": ("ast", "free-function inference entry point outside "
+                       "repro.api"),
+    "ESSR202": ("ast", "numpy host op inside a traced body"),
+    "ESSR203": ("ast", "wall-clock (time module) call inside a traced body"),
+    "ESSR204": ("ast", "host sync (.block_until_ready()/jax.device_get) "
+                       "inside a traced body"),
+    "ESSR205": ("ast", "mutable or unhashable field on a frozen plan/config "
+                       "dataclass"),
+    "ESSR301": ("range", "integer site interval exceeds its storage dtype "
+                         "(or the what-if accumulator budget): overflow is "
+                         "not provably absent"),
+    "ESSR302": ("range", "fused group's minimal accumulator bit-width "
+                         "exceeds the bit budget"),
+    "ESSR303": ("range", "degenerate quant scale: alpha below the step "
+                         "floor collapses a site's codes"),
+    "ESSR304": ("range", "interval-unsound op: the analyzer met a primitive "
+                         "it has no sound transfer rule for (fails closed, "
+                         "never guesses)"),
 }
+
+#: code -> one-line description (legacy view of the registry).
+RULES: Dict[str, str] = {c: desc for c, (_, desc) in RULE_REGISTRY.items()}
 
 #: Which analysis pass owns each rule (drives the per-pass report sections).
 PASS_OF_RULE: Dict[str, str] = {
-    code: ("jaxpr" if code.startswith("ESSR1") else "ast") for code in RULES
+    c: pass_name for c, (pass_name, _) in RULE_REGISTRY.items()
 }
+
+#: Every pass, in report order. "cost" emits metrics only (no rules).
+PASSES: Tuple[str, ...] = ("jaxpr", "ast", "range", "cost")
+
+
+def rules_markdown() -> str:
+    """The docs rule-catalog rows, rendered from the registry (docs/api.md
+    embeds richer prose, but tests assert every code here appears there)."""
+    lines = ["| code | pass | protects against |", "|---|---|---|"]
+    for code in sorted(RULE_REGISTRY):
+        pass_name, desc = RULE_REGISTRY[code]
+        lines.append(f"| {code} | {pass_name} | {desc} |")
+    return "\n".join(lines)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,14 +110,28 @@ class Violation:
 
 
 class Report:
-    """An audit run's violations, with JSON (de)serialization and the
-    baseline diff `bench_gate --audit` gates on."""
+    """An audit run's violations + metrics, with JSON (de)serialization and
+    the baseline diff `bench_gate --audit` gates on.
 
-    def __init__(self, violations: Iterable[Violation] = ()):
+    ``metrics`` carries the machine-readable payloads of the quantitative
+    passes, keyed by section: ``"bitwidth"`` (per-entry/per-group minimal
+    accumulator bit-widths from the range certifier) and ``"static_costs"``
+    (per-entry MACs / HBM bytes / arithmetic intensity from the cost model).
+    Violations gate on (code, site) identity; metrics gate on regression
+    (`gate_metrics`): traffic growing or overflow headroom shrinking vs the
+    committed baseline blocks merge even though no rule fired.
+    """
+
+    def __init__(self, violations: Iterable[Violation] = (),
+                 metrics: Dict[str, Any] = None):
         self.violations: List[Violation] = list(violations)
+        self.metrics: Dict[str, Any] = dict(metrics or {})
 
     def extend(self, violations: Iterable[Violation]) -> None:
         self.violations.extend(violations)
+
+    def merge_metrics(self, section: str, payload: Dict[str, Any]) -> None:
+        self.metrics[section] = payload
 
     def counts(self) -> Dict[str, int]:
         """Per-rule violation counts — every catalog rule appears, zero or
@@ -95,7 +142,8 @@ class Report:
         return out
 
     def by_pass(self) -> Dict[str, List[Violation]]:
-        out: Dict[str, List[Violation]] = {"jaxpr": [], "ast": []}
+        out: Dict[str, List[Violation]] = {
+            p: [] for p in PASSES if p in PASS_OF_RULE.values()}
         for v in self.violations:
             out[v.pass_name].append(v)
         return out
@@ -109,13 +157,16 @@ class Report:
         return [v for v in self.violations if v.key not in seen]
 
     def to_dict(self) -> Dict:
-        return {
+        out = {
             "rules": {code: RULES[code] for code in sorted(RULES)},
             "counts": self.counts(),
             "total": len(self.violations),
             "violations": [v.to_dict() for v in sorted(
                 self.violations, key=lambda v: (v.code, v.site))],
         }
+        if self.metrics:
+            out["metrics"] = self.metrics
+        return out
 
     def to_json(self, path: str) -> None:
         with open(path, "w") as f:
@@ -124,7 +175,8 @@ class Report:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "Report":
-        return cls(Violation.from_dict(v) for v in d.get("violations", []))
+        return cls((Violation.from_dict(v) for v in d.get("violations", [])),
+                   metrics=d.get("metrics", {}))
 
     @classmethod
     def from_json(cls, path: str) -> "Report":
@@ -138,7 +190,75 @@ class Report:
             lines.append(f"[{pass_name}] {len(vs)} violation(s)")
             for v in sorted(vs, key=lambda v: (v.code, v.site)):
                 lines.append(f"  {v.code} {v.site}: {v.message}")
+        bw = self.metrics.get("bitwidth", {})
+        for entry in sorted(bw.get("entries", {})):
+            row = bw["entries"][entry]
+            for group in sorted(row.get("groups", {})):
+                g = row["groups"][group]
+                lines.append(
+                    f"  [bits] {entry} :: {group}: min acc bits "
+                    f"{g['acc_bits']} (headroom vs {bw.get('paper_acc_bits', 24)}b: "
+                    f"{g['headroom_vs_paper']:+d})")
+        costs = self.metrics.get("static_costs", {})
+        for entry in sorted(costs.get("entries", {})):
+            c = costs["entries"][entry]
+            lines.append(
+                f"  [cost] {entry}: {c['macs']:.3e} MACs, "
+                f"{c['hbm_bytes']:.3e} HBM bytes, "
+                f"{c['arith_intensity']:.2f} MAC/byte")
         counts = {c: n for c, n in self.counts().items() if n}
         lines.append(f"total: {len(self.violations)} violation(s)"
                      + (f" {counts}" if counts else ""))
         return "\n".join(lines)
+
+
+def gate_metrics(fresh: Report, baseline: Report,
+                 traffic_tol: float = 0.10) -> List[str]:
+    """Regression gate over the quantitative sections (the metrics analog of
+    `Report.new_vs`): failure strings when, vs the committed baseline,
+
+    * a per-entry static cost (MACs or HBM bytes) GROWS beyond
+      ``traffic_tol`` (shrinking traffic never fails — optimizations land
+      freely, regenerate the baseline to ratchet);
+    * any fused group's minimal accumulator bit-width GROWS (overflow
+      headroom shrank — bit-widths are integers, so any growth is real);
+    * an entry/group present in the baseline disappears (coverage loss).
+
+    New entries/groups (coverage growth) pass; commit them via the refreshed
+    baseline like any new rule site.
+    """
+    fails: List[str] = []
+
+    want_c = baseline.metrics.get("static_costs", {}).get("entries", {})
+    got_c = fresh.metrics.get("static_costs", {}).get("entries", {})
+    for entry, want in want_c.items():
+        got = got_c.get(entry)
+        if got is None:
+            fails.append(f"static_costs[{entry}]: entry point no longer "
+                         f"analyzed (was in baseline)")
+            continue
+        for key in ("macs", "hbm_bytes"):
+            if got[key] > want[key] * (1.0 + traffic_tol):
+                fails.append(
+                    f"static_costs[{entry}].{key}: {got[key]:.4g} > "
+                    f"committed {want[key]:.4g} + {traffic_tol:.0%} band")
+
+    want_b = baseline.metrics.get("bitwidth", {}).get("entries", {})
+    got_b = fresh.metrics.get("bitwidth", {}).get("entries", {})
+    for entry, want in want_b.items():
+        got = got_b.get(entry)
+        if got is None:
+            fails.append(f"bitwidth[{entry}]: entry point no longer "
+                         f"certified (was in baseline)")
+            continue
+        for group, wg in want.get("groups", {}).items():
+            gg = got.get("groups", {}).get(group)
+            if gg is None:
+                fails.append(f"bitwidth[{entry}][{group}]: fused group no "
+                             f"longer certified (was in baseline)")
+            elif gg["acc_bits"] > wg["acc_bits"]:
+                fails.append(
+                    f"bitwidth[{entry}][{group}]: minimal accumulator "
+                    f"bit-width grew {wg['acc_bits']} -> {gg['acc_bits']} "
+                    f"(overflow headroom shrank)")
+    return fails

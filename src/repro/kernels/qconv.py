@@ -43,7 +43,8 @@ from repro.kernels.bsconv import _dw3x3
 from repro.kernels.dispatch import pad_batch, resolve_interpret
 from repro.models.essr import ESSRConfig, slice_width
 from repro.models.layers import pixel_shuffle
-from repro.quant.pams import QuantPack, code_dtype, step_size, weight_alpha
+from repro.quant.pams import (EPS, QuantPack, code_dtype, step_size,
+                              weight_alpha)
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +57,7 @@ def act_qconsts(alpha_raw: float, qmax: int) -> Tuple[float, float]:
     and epsilon-floored step that `quant.pams.effective_alpha`/`step_size`
     produce, evaluated in f32 so kernel constants equal traced scalars."""
     a = np.float32(np.abs(np.float32(alpha_raw)) + np.float32(1e-8))
-    s = np.maximum(a / np.float32(qmax), np.float32(1e-12))
+    s = np.maximum(a / np.float32(qmax), np.float32(EPS))
     return float(a), float(s)
 
 

@@ -1,0 +1,338 @@
+"""The range certifier must be sound (concrete runs always land inside the
+predicted intervals), must prove the shipped integer datapath overflow-free,
+must fail closed on anything it cannot bound — and the cost model + metrics
+gate must price and protect the same entry points."""
+import functools
+import importlib.util
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.cost_model import price_jaxpr
+from repro.analysis.range_infer import (
+    TOP,
+    bits_needed,
+    check_quant_scales,
+    hull,
+    infer_ranges,
+)
+from repro.analysis.report import Report, gate_metrics
+
+REPO_ROOT = __file__.rsplit("/tests/", 1)[0]
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    from repro.analysis.jaxpr_audit import _audit_setup
+    return _audit_setup()
+
+
+def codes(violations):
+    return {v.code for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# interval domain basics
+# ---------------------------------------------------------------------------
+
+def test_bits_needed():
+    assert bits_needed(0, 127) == 8
+    assert bits_needed(-128, 127) == 8
+    assert bits_needed(0, 128) == 9
+    assert bits_needed(-32768, 32767) == 16
+    assert bits_needed(0, 0) == 1
+    assert bits_needed(float("-inf"), 0) is None
+
+
+def test_interval_arithmetic_is_exact_on_simple_chain():
+    def f(x):
+        y = x * 2.0 - 1.0                       # [-1, 1]
+        return jnp.abs(y) + jnp.minimum(y, 0.0)  # [0,1] + [-1,0]
+
+    res = infer_ranges(f, (jnp.zeros((4,), jnp.float32),), {0: (0.0, 1.0)})
+    iv = hull(res.outputs)
+    assert (iv.lo, iv.hi) == (-1.0, 1.0)
+    assert res.violations == []
+
+
+def test_concrete_arguments_fold_exactly():
+    # the correlated alpha/step chain a pure interval domain cannot bound:
+    # with concrete weights it folds to the exact code values
+    w = jnp.asarray([0.5, -1.5, 3.0], jnp.float32)
+
+    def f(w, x):
+        alpha = jnp.max(jnp.abs(w))
+        step = alpha / 127.0
+        wq = jnp.round(jnp.clip(w, -alpha, alpha) / step)
+        return x * jnp.max(jnp.abs(wq))
+
+    res = infer_ranges(f, (w, jnp.zeros((4,), jnp.float32)),
+                       {1: (0.0, 1.0)})
+    iv = hull(res.outputs)
+    assert (iv.lo, iv.hi) == (0.0, 127.0)
+
+
+# ---------------------------------------------------------------------------
+# ESSR301 — overflow proof failures
+# ---------------------------------------------------------------------------
+
+def test_essr301_huge_alpha_overflows_int8():
+    # a huge alpha with a unit step pushes codes far past the int8 lattice
+    def f(x):
+        codes_ = jnp.round(jnp.clip(x, -1e6, 1e6) / 1.0)
+        return codes_.astype(jnp.int8)
+
+    res = infer_ranges(f, (jnp.zeros((8,), jnp.float32),), {0: (0.0, 1e6)},
+                       entry="fixture.huge_alpha")
+    assert "ESSR301" in codes(res.violations)
+
+
+def test_essr301_int16_accumulator_budget_on_qref():
+    from repro.kernels.qconv import essr_forward_qref
+    s = _setup()
+    fn = lambda p, x: essr_forward_qref(p, x, s.cfg, width=8, pack=s.pack)
+    args = (s.params, s.patches)
+    # the int8 chain needs ~18 accumulator bits: a what-if 16-bit budget is
+    # a proof failure...
+    res16 = infer_ranges(fn, args, {1: (0.0, 1.0)},
+                         entry="fixture.qref16", acc_bits=16)
+    assert "ESSR301" in codes(res16.violations)
+    # ...while the real int32 accumulators certify clean
+    res32 = infer_ranges(fn, args, {1: (0.0, 1.0)},
+                         entry="fixture.qref32", acc_bits=32)
+    assert res32.violations == []
+
+
+def test_essr302_bit_budget_gate():
+    from repro.kernels.qconv import essr_forward_qref
+    s = _setup()
+    fn = lambda p, x: essr_forward_qref(p, x, s.cfg, width=8, pack=s.pack)
+    res = infer_ranges(fn, (s.params, s.patches), {1: (0.0, 1.0)},
+                       entry="fixture.budget", bit_budget=12)
+    assert "ESSR302" in codes(res.violations)
+    gs = res.groups()
+    assert gs and max(g["acc_bits"] for g in gs.values()) > 12
+    assert all(g["headroom_vs_paper"] == 24 - g["acc_bits"]
+               for g in gs.values())
+
+
+# ---------------------------------------------------------------------------
+# ESSR303 — degenerate quant scales
+# ---------------------------------------------------------------------------
+
+class _FakePack:
+    qmax = 127
+    scales = ((8, (("first", 1e-15), ("sfb0_b1", 0.5))),)
+
+
+def test_essr303_degenerate_scale_flagged():
+    vs = check_quant_scales(_FakePack(), "test")
+    assert [v.code for v in vs] == ["ESSR303"]
+    assert "first" in vs[0].site and "test" in vs[0].site
+
+
+def test_essr303_shipped_packs_clean():
+    s = _setup()
+    assert check_quant_scales(s.pack, "int8") == []
+    assert check_quant_scales(s.pack_fxp10, "fxp10") == []
+
+
+# ---------------------------------------------------------------------------
+# ESSR304 — fail closed, never guess
+# ---------------------------------------------------------------------------
+
+def test_essr304_unknown_primitive_fails_closed():
+    def f(x):
+        return jax.lax.population_count(x)
+
+    res = infer_ranges(f, (jnp.zeros((4,), jnp.int32),), {0: (0.0, 8.0)},
+                       entry="fixture.popcount")
+    assert "ESSR304" in codes(res.violations)
+    assert hull(res.outputs) == TOP          # unbounded, not guessed
+
+
+# ---------------------------------------------------------------------------
+# satellite: the quantization step floor is ONE constant (pams.EPS)
+# ---------------------------------------------------------------------------
+
+def test_step_floor_unified_at_degenerate_alpha():
+    from repro.kernels.qconv import act_qconsts
+    from repro.quant import pams
+
+    for alpha in (0.0, 1e-30, -1e-9, 0.3, 7.5):
+        a, s = act_qconsts(alpha, 127)
+        a_ref = float(pams.effective_alpha(jnp.asarray(alpha, jnp.float32)))
+        s_ref = float(pams.step_size(jnp.asarray(a_ref, jnp.float32), 127))
+        assert a == a_ref
+        assert s == s_ref, f"floor mismatch at alpha={alpha}"
+        assert s >= pams.EPS
+
+    # and the code lattices agree bit-for-bit at the degenerate point
+    x = jnp.linspace(-1.0, 1.0, 16, dtype=jnp.float32)
+    a, s = act_qconsts(0.0, 127)
+    ref = pams.int_codes(x, pams.effective_alpha(jnp.float32(0.0)), 127)
+    kern = jnp.round(jnp.clip(x, -a, a) / s).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(kern))
+
+
+# ---------------------------------------------------------------------------
+# soundness: concrete integer activations stay inside predicted intervals
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.25, 4.0))
+def test_qref_codes_inside_predicted_intervals(seed, wscale):
+    from repro.kernels.qconv import essr_forward_qref
+    from repro.models.essr import init_essr
+    from repro.quant.pams import build_quant_pack
+
+    s = _setup()
+    params = jax.tree_util.tree_map(
+        lambda w: w * wscale, init_essr(jax.random.PRNGKey(seed), s.cfg))
+    pack = build_quant_pack(params, s.cfg, "int8", s.patches)
+    fn = lambda p, x: essr_forward_qref(p, x, s.cfg, width=8, pack=pack,
+                                        return_codes=True)
+    res = infer_ranges(fn, (params, s.patches), {1: (0.0, 1.0)},
+                       entry="prop.qref")
+    assert res.violations == []
+    img_iv, code_ivs = res.outputs
+
+    x = jax.random.uniform(jax.random.PRNGKey(seed ^ 0x9E37),
+                           s.patches.shape, jnp.float32)
+    img, concrete = fn(params, x)
+    for site, c in concrete.items():
+        iv = hull(code_ivs[site])
+        lo, hi = float(jnp.min(c)), float(jnp.max(c))
+        assert iv.lo - 1e-5 <= lo and hi <= iv.hi + 1e-5, (
+            f"{site}: concrete [{lo}, {hi}] escapes predicted "
+            f"[{iv.lo}, {iv.hi}]")
+    # the fp image tail: predicted bounds are real-arithmetic, so the f32
+    # evaluation may exceed them by rounding ulps — relative slack
+    iv = hull(img_iv)
+    slack = 1e-4 + 1e-5 * max(abs(iv.lo), abs(iv.hi))
+    assert iv.lo - slack <= float(jnp.min(img))
+    assert float(jnp.max(img)) <= iv.hi + slack
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_prices_known_matmul():
+    closed = jax.make_jaxpr(lambda a, b: a @ b)(
+        jnp.zeros((4, 8), jnp.float32), jnp.zeros((8, 16), jnp.float32))
+    cost = price_jaxpr(closed)
+    assert cost.macs == 4 * 8 * 16
+    assert cost.int_macs == 0
+    assert cost.io_bytes == (4 * 8 + 8 * 16 + 4 * 16) * 4
+    assert cost.hbm_bytes == cost.io_bytes
+
+
+def test_cost_model_counts_integer_macs():
+    closed = jax.make_jaxpr(
+        lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32))(
+        jnp.zeros((4, 8), jnp.int8), jnp.zeros((8, 16), jnp.int8))
+    cost = price_jaxpr(closed)
+    assert cost.macs == cost.int_macs == 4 * 8 * 16
+
+
+# ---------------------------------------------------------------------------
+# metrics gate
+# ---------------------------------------------------------------------------
+
+def _mk(macs=100.0, hbm=1000.0, bits=18, entry="e", group="g"):
+    return Report([], metrics={
+        "static_costs": {"entries": {entry: {"macs": macs,
+                                             "hbm_bytes": hbm}}},
+        "bitwidth": {"paper_acc_bits": 24,
+                     "entries": {entry: {"groups": {group: {
+                         "acc_bits": bits}}}}},
+    })
+
+
+def test_gate_metrics_semantics():
+    base = _mk()
+    assert gate_metrics(_mk(), base) == []                     # identical
+    assert gate_metrics(_mk(macs=105.0), base) == []           # inside band
+    fails = gate_metrics(_mk(macs=120.0), base, traffic_tol=0.10)
+    assert len(fails) == 1 and "macs" in fails[0]              # traffic grew
+    assert gate_metrics(_mk(macs=50.0, hbm=400.0), base) == []  # shrink ok
+    fails = gate_metrics(_mk(bits=19), base)
+    assert len(fails) == 1 and "bit-width grew" in fails[0]    # headroom
+    assert gate_metrics(_mk(bits=17), base) == []              # tighter ok
+    fails = gate_metrics(_mk(entry="other"), base)
+    assert len(fails) == 2                                     # coverage loss
+    assert gate_metrics(base, _mk(entry="other"))  # symmetric loss flagged
+    assert gate_metrics(_mk(), Report([])) == []               # no baseline
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _lint_cli():
+    spec = importlib.util.spec_from_file_location(
+        "essr_lint", os.path.join(REPO_ROOT, "scripts", "essr_lint.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_cli_list_rules(capsys):
+    assert _lint_cli().main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    from repro.analysis.report import RULE_REGISTRY
+    for code in RULE_REGISTRY:
+        assert code in out
+
+
+def test_cli_select_rejects_unknown_code():
+    with pytest.raises(SystemExit):
+        _lint_cli().main(["--ast", "--select", "ESSR999"])
+
+
+def test_cli_ignore_filters_pass():
+    assert _lint_cli().main(["--ast", "--ignore", "ESSR201,ESSR202",
+                             "--no-baseline"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# the committed baseline certifies the shipped tree
+# ---------------------------------------------------------------------------
+
+def test_committed_baseline_certifies_bitwidths_and_costs():
+    with open(os.path.join(REPO_ROOT, "ANALYSIS_baseline.json")) as f:
+        base = json.load(f)
+    from repro.analysis.report import RULES
+    assert base["rules"] == {c: RULES[c] for c in sorted(RULES)}
+
+    bw = base["metrics"]["bitwidth"]
+    assert bw["paper_acc_bits"] == 24
+    fxp = bw["entries"]["kernels.qconv.essr_forward_qkernels[fxp10]"]
+    assert fxp["groups"], "fxp10 chain must be certified per fused group"
+    for entry, row in bw["entries"].items():
+        for group, info in row["groups"].items():
+            assert info["acc_bits"] <= 32, (entry, group)
+            assert info["headroom_vs_paper"] == 24 - info["acc_bits"]
+
+    cost = base["metrics"]["static_costs"]["entries"]
+    fused = cost["core.pipeline.fused_frame_fn[pallas-int8]"]
+    assert fused["int_macs"] > 0 and fused["hbm_bytes"] > 0
+    assert fused["pallas_traffic"], "per-kernel traffic must be recorded"
+
+
+def test_shipped_entry_points_certify_clean():
+    from repro.analysis.range_infer import run_range_audit
+    violations, metrics = run_range_audit()
+    assert violations == []
+    # the int-domain reference chains fit the paper's 24-bit accumulator
+    ref8 = metrics["entries"]["kernels.qconv.essr_forward_qref[int8]"]
+    assert ref8["groups"]["top"]["acc_bits"] <= 24
