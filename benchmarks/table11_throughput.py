@@ -19,10 +19,17 @@
     conformance across backends and int8 quant — recorded into the same
     JSON and gated by scripts/bench_gate.py (fused must never be slower
     than host beyond tolerance),
-(e) measured CPU frame throughput per subnet through `SREngine`, once per
+(e) a multi-stream sweep (``ExecutionPlan.streams``): N tenant streams
+    packed into ONE fused dispatch per admission tick
+    (``SREngine.serve_streams``) vs N solo fused engines serving the same
+    frames — aggregate fps both ways, the mux/solo ratio, and a
+    zero-tolerance conformance flag (capacity pinned identically on both
+    sides, so the multiplexed outputs must match the solo engines exactly)
+    — recorded into the same JSON and gated by scripts/bench_gate.py,
+(f) measured CPU frame throughput per subnet through `SREngine`, once per
     backend ("ref" pure-JAX jit vs "pallas" fused kernel groups, interpret
     mode on CPU), exercising the full patch->route->batch->fuse pipeline, and
-(f) the TPU-side projection from the dry-run roofline (results/dryrun),
+(g) the TPU-side projection from the dry-run roofline (results/dryrun),
     i.e. the frames/s one v5e chip supports at the measured bytes/flops.
 Power/gate count are N/A on CPU and stated as such."""
 import argparse
@@ -236,6 +243,93 @@ def _measure_dispatch(params, cfg, frame, stream_frames: int = 6) -> dict:
     }
 
 
+def _measure_streams(params, cfg, frame, n_streams: int = 4,
+                     ticks: int = 3) -> dict:
+    """Multi-stream continuous batching (``ExecutionPlan.streams``): N
+    tenant streams through ONE fused dispatch per admission tick vs N solo
+    fused engines serving the same frames back-to-back. Capacity is PINNED
+    identically on both sides — with auto-probed capacity the shared pool
+    lends a tenant the other streams' slack (statistical multiplexing, a
+    feature), which makes exact solo-conformance ill-posed. Per-stream
+    content differs (rolled copies of the mixed frame), so a cross-stream
+    scatter-back mixup cannot hide behind identical tenants. The
+    ``mux_vs_solo_x`` ratio is measured in the SAME run on the SAME
+    machine, so it travels across hosts; the CI gate floors it at 0.9x and
+    zero-tolerates conformance drift. Both sides serve at the recommended
+    streaming config (``inflight=2``): double-buffering overlaps each
+    side's host-side control work with device compute, which is exactly
+    the steady state a deployment runs in."""
+    h, w = int(frame.shape[0]), int(frame.shape[1])
+    geom = ExecutionPlan().geometry(h, w, cfg.scale)
+    cap = (0, geom.n, geom.n)                    # per-stream; spill-free
+    streams = [[jnp.roll(frame, 17 * (s + 1) * (t + 1), axis=1)
+                for t in range(ticks)] for s in range(n_streams)]
+
+    solo_plan = ExecutionPlan(dispatch="fused", capacity=cap, inflight=2)
+    solos = [SREngine(params, cfg, plan=solo_plan,
+                      switching=_stable_switching())
+             for _ in range(n_streams)]
+    solo_imgs = [[np.asarray(r.image) for r in eng.stream(fs)]     # warm
+                 for eng, fs in zip(solos, streams)]
+
+    mux = SREngine(params, cfg, switching=_stable_switching(),
+                   plan=ExecutionPlan(dispatch="fused", capacity=cap,
+                                      streams=n_streams, inflight=2))
+    results = list(mux.serve_streams([list(fs) for fs in streams]))  # warm
+    allclose = all(
+        np.allclose(np.asarray(r.image),
+                    solo_imgs[r.stream_id][i // n_streams],
+                    rtol=1e-5, atol=1e-5)
+        for i, r in enumerate(results))
+    bit_equal = all(
+        np.array_equal(np.asarray(r.image),
+                       solo_imgs[r.stream_id][i // n_streams])
+        for i, r in enumerate(results))
+    # interleaved best-of-5: solo and mux alternate within each round so a
+    # slow machine phase (allocator churn, background load) penalizes both
+    # sides, and the min of 5 lets each reach its floor — separate
+    # best-of-2 loops made the ratio swing ~15% run to run
+    t_solo = t_mux = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for eng, fs in zip(solos, streams):
+            list(eng.stream(fs))
+        t_solo = min(t_solo, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        list(mux.serve_streams([list(fs) for fs in streams]))
+        t_mux = min(t_mux, time.perf_counter() - t0)
+
+    one = SREngine(params, cfg, switching=_stable_switching(),
+                   plan=ExecutionPlan(dispatch="fused", capacity=cap,
+                                      inflight=2))
+    list(one.serve_streams([list(streams[0])]))                      # warm
+    t_one = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        list(one.serve_streams([list(streams[0])]))
+        t_one = min(t_one, time.perf_counter() - t0)
+
+    total = n_streams * ticks
+    fps_solo, fps_mux = total / t_solo, total / t_mux
+    ratio = fps_mux / fps_solo
+    emit("table11_multi_stream_solo_aggregate", t_solo / total * 1e6,
+         f"fps={fps_solo:.3f};engines={n_streams}")
+    emit("table11_multi_stream_mux_aggregate", t_mux / total * 1e6,
+         f"fps={fps_mux:.3f};mux_vs_solo_x={ratio:.3f};"
+         f"allclose={allclose};bit_equal={bit_equal}")
+    return {
+        "streams": n_streams, "ticks": ticks,
+        "capacity_per_stream": list(cap),
+        "solo_aggregate": {"fps": round(fps_solo, 3),
+                           "engines": n_streams},
+        "mux_aggregate": {"fps": round(fps_mux, 3),
+                          "allclose_vs_solo": allclose,
+                          "bit_equal_vs_solo": bit_equal},
+        "single_stream": {"fps": round(ticks / t_one, 3)},
+        "mux_vs_solo_x": round(ratio, 3),
+    }
+
+
 def _dispatch_conformance(params, cfg, hw: int = 96) -> dict:
     """Fused-vs-host allclose across backends and quant on a small mixed
     frame (small because pallas-interpret is the CPU correctness path, not
@@ -326,6 +420,14 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON,
         # on the same mixed-routing frame, post-warmup
         "dispatch_sweep": _measure_dispatch(params, cfg, mixed),
         "dispatch_conformance": _dispatch_conformance(params, cfg),
+        # N tenant streams through one fused dispatch vs N solo engines.
+        # Cropped frame: the full mixed frame puts ~113 MB of patch
+        # buffers in flight per conv lane, and the ratio of two such runs
+        # inside one long-lived process is dominated by allocator/cache
+        # noise, not packing cost. The crop keeps every subnet routed
+        # (it straddles the smooth/noise boundary) with a working set
+        # small enough that repeated measurements agree.
+        "multi_stream": _measure_streams(params, cfg, mixed[:192, :192]),
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)

@@ -26,6 +26,14 @@ and fails when the fresh numbers regress past a tolerance band:
     ratio travels across machines; ``fused_speedup_x`` is banded against
     the committed value like ``speedup_x``.
 
+  * the multi-stream sweep gates continuous batching: the multiplexed
+    outputs must match the solo engines (zero tolerance — capacity is
+    pinned identically on both sides, so there is no legitimate drift),
+    and the N-stream aggregate fused throughput must hold at least 0.9x of
+    N solo engines — both measured back-to-back in the same run, so the
+    ratio travels across machines; aggregate fps is additionally banded
+    against the committed value like every fps row.
+
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
 
@@ -164,6 +172,29 @@ def compare(committed: dict, fresh: dict, tol: float,
             fails.append(f"shard_sweep[{s}]: sharded output no longer "
                          f"allclose to the single-device path")
         band(f"shard_sweep[{s}].fps", got_row["fps"], want_row["fps"])
+
+    # -- multi-stream sweep: N tenants in one fused dispatch vs N engines --
+    want_m = committed.get("multi_stream", {})
+    got_m = fresh.get("multi_stream", {})
+    if want_m:
+        if not got_m:
+            fails.append("multi_stream: missing from fresh run")
+        else:
+            if not got_m.get("mux_aggregate", {}).get("allclose_vs_solo",
+                                                      False):
+                fails.append("multi_stream: multiplexed stream outputs no "
+                             "longer match the solo engines (pinned "
+                             "capacity, zero tolerance)")
+            ratio = got_m.get("mux_vs_solo_x", 0.0)
+            if ratio < 0.9:
+                fails.append(
+                    f"multi_stream: {got_m.get('streams')}-stream aggregate "
+                    f"fused throughput is {ratio:.3f}x of "
+                    f"{got_m.get('streams')} solo engines (floor 0.9x, "
+                    f"same-run measurement)")
+            band("multi_stream.mux_aggregate.fps",
+                 got_m.get("mux_aggregate", {}).get("fps", 0.0),
+                 want_m.get("mux_aggregate", {}).get("fps", 0.0))
 
     want_q = committed.get("quant_sweep", {})
     got_q = fresh.get("quant_sweep", {})

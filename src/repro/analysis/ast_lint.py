@@ -20,6 +20,13 @@ checks what reviewers keep having to say in words:
            list-typed field makes the whole plan unhashable and every
            frame a cache miss). Frozen-with-``eq=False`` classes hash by
            identity and are exempt (that is `PatchGeometry`'s contract).
+  ESSR206  no free-function STREAM-serving entry points outside ``repro.api``
+           — multi/single-stream serving is an `SREngine` mode
+           (``stream``/``serve_streams``); the multiplexer must not
+           reintroduce the retired FrameServer shape. Detected as a
+           module-level public function taking a stream bundle
+           (``streams``/``frame_streams``/``stream_iters``/``iterables``)
+           next to ``params`` or an ``engine``.
 
 A "traced body" is resolved statically, at function granularity: a function
 is traced when it is jit/pallas/shard_map-decorated, or its name is passed
@@ -164,6 +171,15 @@ def _lint_entry_points(tree: ast.Module, relpath: str
                 f"free-function inference entry point '{node.name}"
                 f"(params, frame...)' outside repro.api — new modes plug "
                 f"into ExecutionPlan/SREngine")
+        stream_args = {"streams", "frame_streams", "stream_iters",
+                       "iterables"} & args
+        if stream_args and ({"params", "engine"} & args):
+            yield Violation(
+                "ESSR206", f"{relpath}:{node.lineno}",
+                f"free-function stream-serving entry point '{node.name}"
+                f"(..., {sorted(stream_args)[0]})' outside repro.api — "
+                f"stream serving is an SREngine mode "
+                f"(stream()/serve_streams())")
 
 
 def _dataclass_flags(node: ast.ClassDef) -> Optional[Dict[str, bool]]:

@@ -1,7 +1,8 @@
 """Pass 1 — jaxpr audit of the real inference entry points (ESSR1xx).
 
 Traces the engine's compiled surfaces (`core.pipeline.fused_frame_fn`, the
-sharded shard_map forward, the integer qconv kernel chain, `edge_score`)
+multi-stream admission tick `fused_stream_frame_fn`, the sharded shard_map
+forward, the integer qconv kernel chain, `edge_score`)
 with `jax.make_jaxpr` on a small-but-representative configuration and walks
 every equation — including nested pjit / shard_map / pallas_call / control-
 flow sub-jaxprs — for the graph hazards the 8K@30FPS budget cannot absorb:
@@ -257,6 +258,17 @@ def entry_point_specs() -> Dict[str, EntrySpec]:
             return fn, (params, frame, 8.0, 40.0)
         return make
 
+    def mux(streams=2):
+        def make():
+            from repro.core.pipeline import fused_stream_frame_fn
+            fn = fused_stream_frame_fn(s.geom, streams, (0, 8, 8), cfg,
+                                       "ref", None, None, None)
+            frames = jnp.stack([frame] * streams)
+            ones = jnp.ones((streams,), jnp.float32)
+            quotas = jnp.full((streams,), 4, jnp.int32)
+            return fn, (params, frames, 8.0 * ones, 40.0 * ones, quotas)
+        return make
+
     def sharded():
         from repro.core.pipeline import _sharded_forward_fn
         from repro.launch.mesh import make_patch_mesh
@@ -290,6 +302,12 @@ def entry_point_specs() -> Dict[str, EntrySpec]:
                   fused(s.pack, "pallas", True), {1: fr, 2: th, 3: th},
                   {"backend": "pallas", "quant": "int8",
                    "dispatch": "fused"}),
+        # the multi-tenant admission tick: 2 streams, one shared pool; the
+        # per-stream C54 quotas quantify over [1, pool] so the proof covers
+        # every share rebalancing the StreamSwitcherBank can emit
+        EntrySpec("core.pipeline.fused_stream_frame_fn[ref]",
+                  mux(), {1: fr, 2: th, 3: th, 4: (1.0, 18.0)},
+                  {"backend": "ref", "quant": "none", "dispatch": "mux"}),
         EntrySpec("core.pipeline.sharded_forward",
                   sharded, {1: fr},
                   {"backend": "ref", "quant": "none", "dispatch": "sharded"}),

@@ -343,6 +343,39 @@ def _call_sub(interp: RangeInterpreter, eqn, invals, key: str) -> List:
     return interp.run_jaxpr(jaxpr, consts, args)
 
 
+def _eval_scan(interp: RangeInterpreter, eqn, invals) -> List:
+    """``lax.scan`` / ``lax.map``. Consts and the carry enter the body at
+    full shape; each xs operand is sliced along its leading axis, so the
+    stacked operand's hull (which covers every slice) is a sound
+    per-iteration seed. The carry is widened by hull-union across body
+    passes until it stops growing — every pass re-walks the body, so
+    accumulator sites stay certified under the fixpoint seeds. The ys hulls
+    from the converged pass bound every iteration's slice. Fails closed if
+    the carry keeps growing past the round cap."""
+    sub = eqn.params["jaxpr"]
+    if isinstance(sub, ClosedJaxpr):
+        jaxpr, consts = sub.jaxpr, sub.consts
+    else:
+        jaxpr, consts = sub, ()
+    n_consts = eqn.params["num_consts"]
+    n_carry = eqn.params["num_carry"]
+    if len(jaxpr.invars) != len(invals):
+        raise UnsoundOpError("scan arity")
+    const_vals = list(invals[:n_consts])
+    carry = [hull(v) for v in invals[n_consts:n_consts + n_carry]]
+    xs = [hull(v) for v in invals[n_consts + n_carry:]]
+    outs = interp.run_jaxpr(jaxpr, consts, const_vals + carry + xs)
+    for _ in range(64):
+        grown = [c.union(hull(o)) for c, o in zip(carry, outs[:n_carry])]
+        if grown == carry:
+            break
+        carry = grown
+        outs = interp.run_jaxpr(jaxpr, consts, const_vals + carry + xs)
+    else:
+        raise UnsoundOpError("scan carry did not converge")
+    return list(carry) + [hull(o) for o in outs[n_carry:]]
+
+
 def _eval_pallas(interp: RangeInterpreter, eqn, invals) -> List:
     gm = eqn.params["grid_mapping"]
     jaxpr = eqn.params["jaxpr"]
@@ -403,6 +436,7 @@ _STRUCTURED: Dict[str, Callable] = {
     "custom_vjp_call_jaxpr": lambda i, e, v: _call_sub(i, e, v, "fun_jaxpr"),
     "custom_vjp_call": lambda i, e, v: _call_sub(i, e, v, "call_jaxpr"),
     "shard_map": lambda i, e, v: _call_sub(i, e, v, "jaxpr"),
+    "scan": _eval_scan,
     "pallas_call": _eval_pallas,
     "get": _eval_get,
     "swap": _eval_swap,

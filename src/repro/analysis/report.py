@@ -38,6 +38,8 @@ RULE_REGISTRY: Dict[str, Tuple[str, str]] = {
                        "inside a traced body"),
     "ESSR205": ("ast", "mutable or unhashable field on a frozen plan/config "
                        "dataclass"),
+    "ESSR206": ("ast", "free-function stream-serving entry point outside "
+                       "repro.api"),
     "ESSR301": ("range", "integer site interval exceeds its storage dtype "
                          "(or the what-if accumulator budget): overflow is "
                          "not provably absent"),

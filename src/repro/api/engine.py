@@ -52,7 +52,7 @@ from repro.api.plan import ExecutionPlan
 from repro.api.result import FrameResult, summarize_stats
 from repro.core import subnet_policy as sp
 from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
-                                 SwitchingConfig)
+                                 StreamSwitcherBank, SwitchingConfig)
 from repro.core.edge_score import edge_score
 from repro.core.pipeline import (edge_selective_sr, fused_frame_fn,
                                  resolve_backend, snap_capacity,
@@ -130,6 +130,15 @@ class SREngine:
                     f"plan.shards={self.plan.shards} on a single-device "
                     f"host; dispatch falls back to one device "
                     f"(per-shard routing control unchanged)")
+        # multi-stream serving (plan.streams > 1): one Algorithm-1 controller
+        # per tenant stream, budgets split by normalized QoS share. Engine
+        # state like the shard bank — a per-call plan cannot change the
+        # tenant set. serve_streams() drives it via StreamMultiplexer.
+        self.stream_bank: Optional[StreamSwitcherBank] = None
+        if self.plan.streams > 1:
+            self.stream_bank = StreamSwitcherBank(
+                base_switching, streams=self.plan.streams,
+                shares=self.plan.stream_shares)
         self._macs = sp.SubnetMacs.make(cfg, self.plan.patch)
         # per-frame stream records, bounded: a long-running stream must not
         # grow host memory without limit (plan.stats_window newest frames;
@@ -144,10 +153,6 @@ class SREngine:
         self._fused_caps: Dict[Tuple, Tuple[int, ...]] = {}
         self._warm: set = set()
         self._fused_last_done = 0.0    # marginal-latency clock (async stream)
-        #: monotone count of frames ever appended to ``stats`` — consumers
-        #: mirroring the bounded deque (the FrameServer shim) need it to
-        #: tell rotation from silence
-        self.stats_total = 0
 
     def _resolve_quant_pack(self, calibrate, quant_cache):
         """plan.quant -> calibrated `QuantPack` (None for fp32 serving)."""
@@ -365,7 +370,6 @@ class SREngine:
         if streaming:
             self.stats.append(dataclasses.replace(out, image=None,
                                                   ids=None, scores=None))
-            self.stats_total += 1
         return out
 
     def _upscale_fused(self, frame, p: ExecutionPlan) -> FrameResult:
@@ -634,6 +638,10 @@ class SREngine:
         wall clock) — their next-frame C54 share drops while balanced shards
         keep their thresholds. Per-shard counts/thresholds/demotions are
         surfaced on the `FrameResult`."""
+        if self.plan.streams > 1:
+            raise ValueError(
+                f"plan.streams={self.plan.streams}: multi-stream serving "
+                f"admits one frame per tenant per tick — use serve_streams()")
         if self.plan.subnet_policy != "threshold":
             raise ValueError(
                 f"streaming routes adaptively and cannot honour forced "
@@ -694,7 +702,6 @@ class SREngine:
         # unboundedly over a long stream (one 8K frame is ~100s of MB)
         self.stats.append(dataclasses.replace(out, image=None,
                                               ids=None, scores=None))
-        self.stats_total += 1
         return out
 
     def stream(self, frames: Iterable[jax.Array]) -> Iterator[FrameResult]:
@@ -708,6 +715,10 @@ class SREngine:
         switcher (and capacity growth) adapt from the newest *materialized*
         frame, which trails the newest *launched* frame by up to
         ``inflight - 1``. Results still arrive strictly in frame order."""
+        if self.plan.streams > 1:
+            raise ValueError(
+                f"plan.streams={self.plan.streams}: multi-stream serving "
+                f"admits one frame per tenant per tick — use serve_streams()")
         if self.plan.dispatch == "fused" and self.plan.inflight > 1:
             yield from self._stream_fused_async(frames)
             return
@@ -724,6 +735,40 @@ class SREngine:
                 yield self._finalize_fused(pending.popleft())
         while pending:
             yield self._finalize_fused(pending.popleft())
+
+    def serve_streams(self, streams: Iterable[Iterable[jax.Array]]
+                      ) -> Iterator[FrameResult]:
+        """Serve ``plan.streams`` tenant frame streams through ONE fused
+        dispatch per admission tick (the multi-tenant front door).
+
+        ``streams``: one frame iterable per tenant, ``plan.streams`` of
+        them, in stream-id order. Each admission tick pulls the next frame
+        from every still-live stream (round-robin admission — no tenant can
+        starve another), packs the tick's routed patches from ALL streams
+        into the same capacity-slotted fused executable, and yields one
+        `FrameResult` per live stream (tagged ``stream_id``), ticks in
+        admission order and streams in id order within a tick. Per-stream
+        QoS: every stream keeps its own Algorithm-1 switcher with a
+        share-weighted budget split (``plan.stream_shares``); under
+        aggregate overload C54 slots degrade per stream in share proportion,
+        raster-deterministically — frames are never dropped. Streams may
+        have different lengths: exhausted streams leave the tick (one
+        recompile per distinct live-stream count). ``plan.inflight >= 2``
+        double-buffers whole ticks, with the same one-tick control delay as
+        the single-stream async path.
+
+        With ``plan.streams == 1`` this is exactly ``stream()`` over the
+        single iterable."""
+        streams = list(streams)
+        if len(streams) != self.plan.streams:
+            raise ValueError(
+                f"serve_streams got {len(streams)} streams for "
+                f"plan.streams={self.plan.streams}")
+        if self.plan.streams == 1:
+            yield from self.stream(streams[0])
+            return
+        from repro.runtime.multiplex import StreamMultiplexer
+        yield from StreamMultiplexer(self).serve(streams)
 
     # -- aggregate reporting -------------------------------------------------
 

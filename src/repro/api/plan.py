@@ -1,21 +1,27 @@
 """ExecutionPlan — the frozen, hashable description of HOW a frame is run.
 
 Consolidates every knob that used to travel as loose keyword arguments
-through `edge_selective_sr` / `FrameServer` / the benchmark helpers:
-patch geometry, edge thresholds, the jit bucket schedule, the subnet
-policy, and the Pallas interpret policy. One plan == one compilation/routing
-regime; `SREngine` holds exactly one and every call reuses it (override per
-call with ``plan.replace(...)`` only when a benchmark sweeps a knob).
+through the legacy free functions and benchmark helpers: patch geometry,
+edge thresholds, the jit bucket schedule, the subnet policy, and the Pallas
+interpret policy. One plan == one compilation/routing regime; `SREngine`
+holds exactly one and every call reuses it (override per call with
+``plan.replace(...)`` only when a benchmark sweeps a knob).
 
 ``plan.geometry(h, w, scale)`` resolves the cached `PatchGeometry` (gather/
 scatter index maps + overlap counts) for a frame shape under this plan's
 patch/overlap — computed once per geometry, so repeated frames of a stream
 pay zero host-side setup.
+
+Validation is declarative: ``_FIELD_RULES`` (one predicate + allowed-set
+description per field) and ``_CROSS_RULES`` (cross-field constraints like
+``inflight -> fused``), both enforced in ``__post_init__`` with ONE error
+format — ``ExecutionPlan.<field>=<got!r>: allowed <set>`` — so every
+rejection names the field, the offending value, and what would have passed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -48,6 +54,80 @@ DISPATCH_MODES = ("host", "fused")
 #: Derived from `repro.quant.pams.QUANT_MODES` (the mode -> bits mapping),
 #: the single source of truth for which lattices exist.
 QUANT_MODES = (None, *pams_quant_modes)
+
+
+def _plan_error(field: str, got, allowed: str) -> ValueError:
+    """The one validation error shape every rule raises through."""
+    return ValueError(f"ExecutionPlan.{field}={got!r}: allowed {allowed}")
+
+
+def _is_int(v) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def _pos_int(v) -> bool:
+    return _is_int(v) and v >= 1
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+#: Declarative per-field validation: field -> (predicate over the normalized
+#: value, human-readable allowed set). Single-field rules only; constraints
+#: spanning fields live in `_CROSS_RULES`. New plan knobs add one row here
+#: instead of growing an if-chain in ``__post_init__``.
+_FIELD_RULES: Dict[str, Tuple[Callable, str]] = {
+    "patch": (_pos_int, "a positive int"),
+    "overlap": (lambda v: _is_int(v) and v >= 0, "an int >= 0"),
+    "t1": (_is_num, "a number"),
+    "t2": (_is_num, "a number"),
+    "buckets": (lambda v: bool(v) and all(_pos_int(b) for b in v)
+                and list(v) == sorted(set(v)),
+                "a non-empty ascending tuple of positive ints"),
+    "subnet_policy": (lambda v: v in SUBNET_POLICIES,
+                      f"one of {SUBNET_POLICIES}"),
+    "interpret": (lambda v: v in (None, True, False), "None/True/False"),
+    "quant": (lambda v: v in QUANT_MODES, f"one of {QUANT_MODES}"),
+    "dispatch": (lambda v: v in DISPATCH_MODES, f"one of {DISPATCH_MODES}"),
+    "capacity": (lambda v: v is None or all(c >= 0 for c in v),
+                 "None or a tuple of ints >= 0"),
+    "inflight": (_pos_int, "a positive int"),
+    "stats_window": (_pos_int, "a positive int"),
+    "shards": (_pos_int, "a positive int"),
+    "streams": (_pos_int, "a positive int"),
+    "stream_shares": (lambda v: v is None or (bool(v)
+                      and all(s > 0 and np.isfinite(s) for s in v)),
+                      "None or a tuple of finite floats > 0"),
+}
+
+#: Cross-field constraints: (field to blame, predicate over the whole plan,
+#: allowed-set description builder). Same error format as `_FIELD_RULES`.
+_CROSS_RULES: Tuple[Tuple[str, Callable, Callable], ...] = (
+    ("overlap", lambda p: p.overlap < p.patch,
+     lambda p: f"an int < patch ({p.patch})"),
+    ("t2", lambda p: p.t2 >= p.t1,
+     lambda p: f"a number >= t1 ({p.t1})"),
+    # host dispatch blocks per frame, so inflight > 1 would be silently
+    # inert — refuse rather than let a user believe the stream is
+    # double-buffered
+    ("inflight", lambda p: p.inflight == 1 or p.dispatch == "fused",
+     lambda p: "1 unless dispatch='fused' (host dispatch serves "
+               "synchronously)"),
+    # multi-stream admission packs every tick into the fused executable;
+    # there is no host-dispatch multiplexer
+    ("streams", lambda p: p.streams == 1 or p.dispatch == "fused",
+     lambda p: "1 unless dispatch='fused' (stream packing rides the fused "
+               "executable)"),
+    # per-stream QoS is Algorithm-1 threshold control; a forced policy has
+    # no thresholds to degrade
+    ("streams", lambda p: p.streams == 1 or p.subnet_policy == "threshold",
+     lambda p: "1 unless subnet_policy='threshold' (per-stream QoS adapts "
+               "thresholds)"),
+    ("stream_shares", lambda p: (p.stream_shares is None
+                                 or len(p.stream_shares) == p.streams),
+     lambda p: f"None or a tuple of exactly streams={p.streams} shares"),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,55 +186,47 @@ class ExecutionPlan:
     #: engine degrades transparently: routing/straggler control stays
     #: per-shard, dispatch falls back to one device.
     shards: int = 1
+    #: Concurrent tenant streams multiplexed into ONE fused dispatch per
+    #: admission tick (`SREngine.serve_streams`). 1 = today's single-stream
+    #: serving; >= 2 requires dispatch="fused" and the threshold policy
+    #: (per-stream QoS is Algorithm-1 control). Every stream keeps its own
+    #: switcher; the compiled (geometry, capacity-profile) executable — and
+    #: the PTQ calibration and warmup behind it — is shared across tenants.
+    streams: int = 1
+    #: Relative QoS weight per stream (len == streams), normalized by the
+    #: engine: stream s gets share_s/sum(shares) of the aggregate C54/sec
+    #: budget and of the per-frame trim bands. None = equal shares. Under
+    #: aggregate overload the capacity router degrades each stream's C54
+    #: share raster-deterministically in this proportion — frames are never
+    #: dropped.
+    stream_shares: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
-        # keep the frozen/hashable contract even when callers pass a list
+        # -- normalization (keeps the frozen/hashable contract when callers
+        # pass lists; coercion failures blame the field like any rule) ------
         object.__setattr__(self, "buckets", tuple(self.buckets))
-        if self.subnet_policy not in SUBNET_POLICIES:
-            raise ValueError(f"subnet_policy {self.subnet_policy!r} not in "
-                             f"{SUBNET_POLICIES}")
-        if self.overlap >= self.patch:
-            raise ValueError(f"overlap {self.overlap} must be < patch {self.patch}")
-        if self.t2 < self.t1:
-            raise ValueError(f"t2 {self.t2} must be >= t1 {self.t1}")
-        if (not self.buckets or any(b <= 0 for b in self.buckets)
-                or list(self.buckets) != sorted(set(self.buckets))):
-            raise ValueError(f"buckets must be ascending positive ints, "
-                             f"got {self.buckets}")
-        if self.interpret not in (None, True, False):
-            raise ValueError(f"interpret must be None/True/False, "
-                             f"got {self.interpret!r}")
-        if self.quant not in QUANT_MODES:
-            raise ValueError(f"quant must be one of {QUANT_MODES}, "
-                             f"got {self.quant!r}")
-        if self.dispatch not in DISPATCH_MODES:
-            raise ValueError(f"dispatch {self.dispatch!r} not in "
-                             f"{DISPATCH_MODES}")
         if self.capacity is not None:
             try:
                 caps = tuple(int(c) for c in self.capacity)
-            except (TypeError, ValueError):
-                raise ValueError(f"capacity must be a tuple of ints >= 0, "
-                                 f"got {self.capacity!r}")
-            if any(c < 0 for c in caps):
-                raise ValueError(f"capacity entries must be >= 0, got {caps}")
+            except (TypeError, ValueError) as e:
+                raise _plan_error("capacity", self.capacity,
+                                  _FIELD_RULES["capacity"][1]) from e
             object.__setattr__(self, "capacity", caps)
-        if not isinstance(self.inflight, int) or self.inflight < 1:
-            raise ValueError(f"inflight must be a positive int, "
-                             f"got {self.inflight!r}")
-        if self.inflight > 1 and self.dispatch != "fused":
-            # host dispatch blocks per frame, so the combination would be
-            # silently inert — refuse rather than let a user believe the
-            # stream is double-buffered
-            raise ValueError(f"inflight={self.inflight} requires "
-                             f"dispatch='fused' (host dispatch serves "
-                             f"synchronously)")
-        if not isinstance(self.stats_window, int) or self.stats_window < 1:
-            raise ValueError(f"stats_window must be a positive int, "
-                             f"got {self.stats_window!r}")
-        if not isinstance(self.shards, int) or self.shards < 1:
-            raise ValueError(f"shards must be a positive int, "
-                             f"got {self.shards!r}")
+        if self.stream_shares is not None:
+            try:
+                shares = tuple(float(s) for s in self.stream_shares)
+            except (TypeError, ValueError) as e:
+                raise _plan_error("stream_shares", self.stream_shares,
+                                  _FIELD_RULES["stream_shares"][1]) from e
+            object.__setattr__(self, "stream_shares", shares)
+        # -- the declarative tables ----------------------------------------
+        for field, (ok, allowed) in _FIELD_RULES.items():
+            value = getattr(self, field)
+            if not ok(value):
+                raise _plan_error(field, value, allowed)
+        for field, ok, allowed in _CROSS_RULES:
+            if not ok(self):
+                raise _plan_error(field, getattr(self, field), allowed(self))
 
     def replace(self, **kw) -> "ExecutionPlan":
         """Functional update (plans are frozen)."""

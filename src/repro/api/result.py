@@ -1,9 +1,9 @@
 """FrameResult — the one structured return type of every SREngine call.
 
 Replaces the previous zoo of shapes: `SRResult` (edge_selective_sr), bare
-`jax.Array` (sr_whole / sr_all_patches / FrameServer.serve_frame) and
-side-channel `FrameStats`. Fields that a mode does not produce (e.g. edge
-scores for whole-frame reference) are None / zero rather than absent, so
+`jax.Array` (sr_whole / sr_all_patches) and the retired serving shim's
+side-channel stats. Fields that a mode does not produce (e.g. edge scores
+for whole-frame reference) are None / zero rather than absent, so
 downstream code can treat all modes uniformly.
 """
 from __future__ import annotations
@@ -34,8 +34,7 @@ class FrameResult:
     latency_s: float = 0.0                    # wall-clock incl. device sync
     # (t1, t2): for upscale() the values used for routing ((0,0) when routing
     # ignored them); for streamed frames the switcher's live thresholds AFTER
-    # this frame's adaptation (matching the old FrameServer/ summary()
-    # "final_thresholds" semantics)
+    # this frame's adaptation (the summary() "final_thresholds" semantics)
     thresholds: Tuple[float, float] = (0.0, 0.0)
     deadline_missed: bool = False             # streaming only
     # which dispatch path actually ran this frame: "host" (routing on the
@@ -62,6 +61,15 @@ class FrameResult:
     shard_thresholds: Optional[Tuple[Tuple[float, float], ...]] = None
     # which shards were demoted as stragglers on this frame
     shard_deadline_missed: Optional[Tuple[bool, ...]] = None
+    # -- multi-stream serving (plan.streams > 1) -----------------------------
+    # which tenant stream this frame belongs to (its index in the
+    # serve_streams() argument); None outside multi-stream serving. For
+    # multiplexed frames, deadline_missed means THIS stream was attributed
+    # as an overload source of a missed shared tick (share-weighted cost
+    # attribution), and latency_s is the tick's marginal service time —
+    # the live streams of a tick are served concurrently, so per-stream fps
+    # is 1/latency_s and aggregate fps is live_streams/latency_s.
+    stream_id: Optional[int] = None
 
     @property
     def n_patches(self) -> int:
@@ -71,7 +79,7 @@ class FrameResult:
 def summarize_stats(stats) -> dict:
     """Table-XI-style aggregate over frame records (FrameResult or any
     object with counts/mac_saving/latency_s/thresholds/deadline_missed).
-    Shared by `SREngine.summary` and the legacy `FrameServer` shim."""
+    The aggregate behind `SREngine.summary`."""
     from repro.core import subnet_policy as sp
     if not stats:
         return {}
@@ -115,4 +123,24 @@ def summarize_stats(stats) -> dict:
                      if getattr(s, "shard_thresholds", None) is not None), None)
         if last is not None:
             out["final_shard_thresholds"] = last.shard_thresholds
+    sids = sorted({s.stream_id for s in stats
+                   if getattr(s, "stream_id", None) is not None})
+    if sids:
+        # per-tenant QoS ledger: each stream's own routing mix, overload
+        # attributions and live thresholds over the window
+        per = {}
+        for sid in sids:
+            recs = [s for s in stats if getattr(s, "stream_id", None) == sid]
+            c = np.array([r.counts for r in recs])
+            per[sid] = {
+                "frames": len(recs),
+                "subnet_share": dict(zip(
+                    sp.SUBNET_NAMES,
+                    (c.sum(0) / max(c.sum(), 1)).round(4).tolist())),
+                "mean_mac_saving": float(np.mean([r.mac_saving
+                                                  for r in recs])),
+                "deadline_misses": int(sum(r.deadline_missed for r in recs)),
+                "final_thresholds": recs[-1].thresholds,
+            }
+        out["streams"] = per
     return out

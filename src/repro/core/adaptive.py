@@ -216,3 +216,120 @@ class ShardSwitcherBank:
     @property
     def thresholds(self) -> Tuple[Tuple[float, float], ...]:
         return tuple(sw.thresholds for sw in self.switchers)
+
+
+# ---------------------------------------------------------------------------
+# multi-stream serving: one Algorithm-1 controller per tenant stream
+# ---------------------------------------------------------------------------
+
+def per_stream_config(cfg: SwitchingConfig, share: float) -> SwitchingConfig:
+    """Scale a stream-level SwitchingConfig down to one tenant's QoS share.
+
+    ``share`` is the stream's normalized fraction of the aggregate (0, 1].
+    The per-second C54 budget and the per-frame trim bands scale with it
+    (positive values floored at 1 so a thin stream still adapts; 0 stays 0 —
+    ``frame_low=0`` means "never decay thresholds" and splitting must not
+    re-enable it); thresholds, steps and bounds are per-controller
+    quantities and stay as-is. The same contract as :func:`per_shard_config`,
+    with a real-valued weight instead of an even split."""
+    if not (0.0 < share <= 1.0):
+        raise ValueError(f"share must be in (0, 1], got {share}")
+    if share == 1.0:
+        return cfg
+    split = lambda v: max(1, int(v * share)) if v > 0 else v
+    return dataclasses.replace(
+        cfg,
+        c54_per_sec_budget=split(cfg.c54_per_sec_budget),
+        frame_high=split(cfg.frame_high),
+        frame_low=split(cfg.frame_low))
+
+
+class StreamSwitcherBank:
+    """Per-stream Algorithm-1 controllers + share-weighted QoS attribution.
+
+    One `AdaptiveSwitcher` per tenant stream, each seeded with the
+    stream-level config split by that stream's normalized share
+    (:func:`per_stream_config`) — thresholds adapt independently, so one
+    tenant's content can never move another tenant's decision boundary.
+    ``tick_quotas`` turns each stream's split per-second budget into its
+    per-admission-tick C54 slot quota (the traced ``quotas`` argument of the
+    fused multi-stream executable). ``note_tick`` attributes a missed tick
+    deadline by *share-weighted* cost — a stream is the overload source when
+    its MAC cost exceeds what its share entitles it to — mirroring
+    `ShardSwitcherBank.note_frame`'s cost-model attribution.
+    """
+
+    def __init__(self, cfg: Optional[SwitchingConfig] = None,
+                 streams: int = 1,
+                 shares: Optional[Sequence[float]] = None):
+        cfg = cfg if cfg is not None else SwitchingConfig()
+        if streams < 1:
+            raise ValueError(f"streams must be >= 1, got {streams}")
+        if shares is None:
+            shares = (1.0,) * streams
+        if len(shares) != streams:
+            raise ValueError(f"got {len(shares)} shares for {streams} streams")
+        total = float(sum(shares))
+        if not (total > 0 and np.isfinite(total)):
+            raise ValueError(f"shares must sum to a positive finite value, "
+                             f"got {tuple(shares)}")
+        self.streams = streams
+        self.shares: Tuple[float, ...] = tuple(float(s) / total for s in shares)
+        self.switchers: List[AdaptiveSwitcher] = [
+            AdaptiveSwitcher(per_stream_config(cfg, sh))
+            for sh in self.shares]
+
+    def tick_quotas(self) -> Tuple[int, ...]:
+        """Per-stream C54 slot quota for one admission tick: each tenant's
+        split per-second budget spread over its fps, floored at 1 (a live
+        stream always keeps at least one C54 slot — shares degrade quality,
+        they never starve a tenant)."""
+        return tuple(max(1, sw.cfg.c54_per_sec_budget // max(1, sw.cfg.fps))
+                     for sw in self.switchers)
+
+    def observe(self, stream: int, n_c54: int) -> None:
+        """Feed one stream's served-frame C54 count to its own controller."""
+        self.switchers[stream].observe_frame(n_c54)
+
+    def note_tick(self, missed: bool, costs: Sequence[float],
+                  streams: Optional[Sequence[int]] = None
+                  ) -> Tuple[bool, ...]:
+        """Feed back one tick's outcome; returns which streams were demoted.
+
+        ``costs``: estimated per-stream MAC cost of the tick just served;
+        ``streams``: the live stream indices those costs belong to (defaults
+        to all). On a missed (shared wall-clock) deadline the streams whose
+        *share-weighted* cost — cost divided by normalized share — exceeds
+        the weighted mean are demoted with severity = overweight ratio; a
+        tick loaded exactly in share proportion demotes every live stream
+        (aggregate throughput must recover, and no tenant is entitled to the
+        others' backing off alone)."""
+        live = tuple(range(self.streams)) if streams is None else tuple(streams)
+        if len(costs) != len(live):
+            raise ValueError(f"got {len(costs)} costs for {len(live)} "
+                             f"live streams")
+        if not missed:
+            return (False,) * self.streams
+        weighted = np.asarray(
+            [float(c) / self.shares[s] for c, s in zip(costs, live)],
+            np.float64)
+        mean = float(weighted.mean())
+        demoted = [False] * self.streams
+        if mean <= 0 or np.allclose(weighted, mean):
+            # loaded exactly in share proportion: every live stream backs off
+            for s in live:
+                demoted[s] = True
+                self.switchers[s].demote_for_straggler(severity=1.0)
+        else:
+            for w, s in zip(weighted, live):
+                if w > mean:
+                    demoted[s] = True
+                    # severity capped like the shard bank: one pathological
+                    # tick cannot slam a tenant's thresholds to the bound
+                    self.switchers[s].demote_for_straggler(
+                        severity=min(float(w / mean), 3.0))
+        return tuple(demoted)
+
+    @property
+    def thresholds(self) -> Tuple[Tuple[float, float], ...]:
+        return tuple(sw.thresholds for sw in self.switchers)

@@ -320,6 +320,117 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
     return jax.jit(run)
 
 
+@functools.lru_cache(maxsize=128)
+def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
+                          caps: Tuple[int, ...], cfg: ESSRConfig,
+                          backend: str, interpret: Optional[bool],
+                          mesh, quant):
+    """The compiled multi-tenant admission-tick executable: ``streams``
+    same-geometry frames (one per live tenant stream) through ONE
+    capacity-slotted dispatch. Signature of the returned callable:
+
+        (params, frames, t1s, t2s, quotas)
+            -> (images, eff_ids, scores, counts, spills)
+
+    ``frames`` is (S, H, W, C); ``t1s``/``t2s``/``quotas`` are (S,) traced
+    arrays — per-stream Algorithm-1 adaptation and share rebalancing never
+    recompile the tick. ``quotas`` is each stream's top-subnet (C54) slot
+    share for this tick: the router demotes a stream's top-subnet patches
+    beyond its quota to the next subnet in raster order *before* the
+    aggregate capacity cascade, so under aggregate overload degradation is
+    share-weighted and raster-deterministic — frames are never dropped.
+
+    Patch provenance is positional: the flat patch axis is stream-major
+    (``stream_id = i // geometry.n``, ``patch_id = i % geometry.n``), so
+    ``capacity_route``/``capacity_dispatch``/``capacity_combine`` run on the
+    shared pool unchanged and the scatter-back fuses each stream's frame
+    independently. Outputs: ``images`` (S, sH, sW, C); ``eff_ids``/``scores``
+    flat (S*N,); ``counts``/``spills`` per-stream (S, n_subnets), where
+    ``spills[s, k]`` counts stream s's patches that wanted subnet ``k``
+    (pre-quota) but ran below it — quota demotions and aggregate spill
+    cascade land in the same ledger, exactly like the solo streaming path's
+    budget-clamped capacity."""
+    from repro.models.layers import bilinear_resize
+
+    base_forward = resolve_forward(backend, quant)
+    if mesh is not None and int(mesh.size) > 1:
+        def forward(params, patches, cfg, width, interpret=None):
+            return sharded_forward(params, patches, cfg, width, mesh=mesh,
+                                   backend=backend, interpret=interpret,
+                                   quant=quant)
+    else:
+        forward = base_forward
+    widths = cfg.subnet_widths()
+    if len(caps) != len(widths):
+        raise ValueError(f"capacity profile {caps} must have one entry per "
+                         f"subnet width {widths}")
+    if streams < 1:
+        raise ValueError(f"streams must be >= 1, got {streams}")
+    top = len(widths) - 1
+    n = geometry.n
+    # On CPU the aggregate pool's conv batch (streams x per-stream slots)
+    # falls out of cache and runs ~1.4x slower than per-stream batches, so
+    # the shared lanes are chunked stream-count-wise through lax.map (the
+    # fp32 conv forward is row-wise bit-identical across batch sizes — the
+    # packing stays conformant, see tests/test_multiplex.py). Accelerator
+    # backends keep the single dense batch (the MXU wants it as wide as the
+    # pool allows), sharded forward is never chunked (shard_map owns the
+    # batch axis), and quantized graphs keep it too: the fake-quant chain's
+    # fp rounding is not bit-stable across the scan boundary, and the quant
+    # conformance contract is bit-oriented.
+    chunks = (streams if (streams > 1 and mesh is None and quant is None
+                          and jax.default_backend() == "cpu") else 1)
+
+    def run(params, frames, t1s, t2s, quotas):
+        patches = jax.vmap(geometry.extract)(frames)        # (S, N, p, p, C)
+        flat = patches.reshape((streams * n,) + patches.shape[2:])
+        scores = edge_score(flat)
+        want = sp.decide(scores, jnp.repeat(t1s, n), jnp.repeat(t2s, n))
+        want2 = want.reshape(streams, n)
+        routed2 = want2
+        if top > 0:
+            # per-stream C54 quota: the share-weighted per-tick ceiling —
+            # overflow demotes in raster order, like the solo budget clamp
+            member = want2 == top
+            pos = jnp.cumsum(member.astype(jnp.int32), axis=1) - 1
+            over = member & (pos >= quotas[:, None])
+            routed2 = jnp.where(over, top - 1, want2)
+        eff, _ = capacity_route(routed2.reshape(-1), caps)
+        out = bilinear_resize(flat, cfg.scale)
+        for k in range(1, len(widths)):
+            if caps[k] == 0:
+                continue                         # lane elided from the graph
+            disp, slot, memberk = capacity_dispatch(flat, eff, k, caps[k])
+            if chunks > 1:
+                pad = (-caps[k]) % chunks
+                disp_p = jnp.pad(
+                    disp, ((0, pad),) + ((0, 0),) * (disp.ndim - 1))
+                sr = jax.lax.map(
+                    functools.partial(forward, params, cfg=cfg,
+                                      width=widths[k], interpret=interpret),
+                    disp_p.reshape((chunks, -1) + disp.shape[1:]))
+                sr = sr.reshape((-1,) + sr.shape[2:])[:caps[k]]
+            else:
+                sr = forward(params, disp, cfg, widths[k],
+                             interpret=interpret)
+            out = capacity_combine(out, sr, slot, memberk)
+        images = jax.vmap(geometry.fuse_average)(
+            out.reshape((streams, n) + out.shape[1:]))
+        eff2 = eff.reshape(streams, n)
+        counts = jnp.stack(
+            [jnp.sum(eff2 == k, axis=1) for k in range(len(widths))],
+            axis=1).astype(jnp.int32)
+        # hop ledger: wanted >= k but ran < k — transitive, so the aggregate
+        # cascade's spill-throughs and the quota demotions both register
+        spills = jnp.stack(
+            [jnp.zeros((streams,), jnp.int32)] +
+            [jnp.sum((want2 >= k) & (eff2 < k), axis=1).astype(jnp.int32)
+             for k in range(1, len(widths))], axis=1)
+        return images, eff, scores, counts, spills
+
+    return jax.jit(run)
+
+
 # essr: allow[ESSR201] — legacy surface kept for tests/benches; new modes go through SREngine
 def fused_frame_forward(params, frame, cfg: ESSRConfig, *,
                         geometry: PatchGeometry, caps: Tuple[int, ...],

@@ -1,0 +1,243 @@
+"""StreamMultiplexer — N tenant frame streams through ONE fused dispatch.
+
+`SREngine.serve_streams` delegates here when ``plan.streams >= 2``; this
+module is never a public entry point of its own (the ESSR206 lint holds the
+line: stream serving lives on the `repro.api` facade).
+
+Admission model: each *tick* pulls the next frame from every still-live
+stream (strict round-robin — a tenant is admitted exactly once per tick, so
+no stream can starve another) and packs all of them into one
+`fused_stream_frame_fn` call. Patch provenance ``(stream_id, patch_id)`` is
+positional — the flat patch axis is stream-major — so the aggregate
+capacity cascade runs on the shared pool unchanged while scatter-back fuses
+each stream's frame independently. The compiled (geometry, live-count,
+capacity-profile) executable — and the PTQ calibration and warmup behind it
+— is shared by every tenant; per-stream thresholds and C54 quotas are
+*traced* arguments, so Algorithm-1 adaptation and share rebalancing never
+recompile a tick.
+
+QoS: every stream owns an `AdaptiveSwitcher` seeded with its share of the
+aggregate budget (`StreamSwitcherBank`). The in-graph per-stream quota is
+the hard ceiling — under aggregate overload each stream's C54 slots degrade
+in share proportion, raster-deterministically, and frames are never
+dropped. A missed tick deadline is attributed by share-weighted MAC cost:
+only the streams running past their entitlement are demoted, so one
+tenant's heavy content never lowers another tenant's quality.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Iterable, Iterator, List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api.result import FrameResult
+from repro.core import subnet_policy as sp
+from repro.core.edge_score import edge_score
+from repro.core.pipeline import fused_stream_frame_fn, snap_capacity
+
+
+class StreamMultiplexer:
+    """The admission-tick loop behind `SREngine.serve_streams`.
+
+    Holds no state of its own beyond the engine it drives: capacity
+    profiles live in the engine's fused-caps cache (keyed by geometry AND
+    live-stream count, so they survive across serve_streams calls), control
+    state lives in the engine's `StreamSwitcherBank`.
+    """
+
+    def __init__(self, engine):
+        if engine.plan.streams < 2:
+            raise ValueError(f"StreamMultiplexer needs plan.streams >= 2, "
+                             f"got {engine.plan.streams}")
+        if engine.stream_bank is None:
+            raise ValueError("engine has no stream bank (was the plan "
+                             "replaced after construction?)")
+        self.engine = engine
+        self.bank = engine.stream_bank
+
+    # -- the admission loop --------------------------------------------------
+
+    def serve(self, streams: Sequence[Iterable[jax.Array]]
+              ) -> Iterator[FrameResult]:
+        """Multiplex the tenant iterables; yields FrameResults tick by tick
+        (live streams in id order within a tick). ``plan.inflight >= 2``
+        keeps that many whole ticks in flight (device compute of tick T
+        overlaps admission of tick T+1), at the cost of the per-stream
+        controllers adapting from a tick-old frame — the same documented
+        control delay as the single-stream async path, per tick instead of
+        per frame."""
+        iters = [iter(s) for s in streams]
+        live: List[int] = list(range(len(iters)))
+        pending: Deque[dict] = collections.deque()
+        inflight = self.engine.plan.inflight
+        while live:
+            frames, nxt = [], []
+            for s in live:
+                try:
+                    frames.append(jnp.asarray(next(iters[s])))
+                    nxt.append(s)
+                except StopIteration:
+                    pass
+            live = nxt
+            if not live:
+                break
+            pending.append(self._launch_tick(live, frames))
+            while len(pending) >= inflight:
+                yield from self._finalize_tick(pending.popleft())
+        while pending:
+            yield from self._finalize_tick(pending.popleft())
+
+    # -- one tick ------------------------------------------------------------
+
+    def _launch_tick(self, live: Sequence[int], frames: List[jax.Array]
+                     ) -> dict:
+        """Dispatch one admission tick WITHOUT blocking (the tick analog of
+        the engine's ``_launch_fused``)."""
+        eng = self.engine
+        p = eng.plan
+        t0 = time.perf_counter()
+        shape = tuple(frames[0].shape)
+        for s, f in zip(live, frames):
+            if tuple(f.shape) != shape:
+                raise ValueError(
+                    f"stream {s} frame shape {tuple(f.shape)} != {shape}: "
+                    f"one admission tick packs one geometry; serve "
+                    f"same-shaped streams together")
+        geom = p.geometry(shape[0], shape[1], eng.cfg.scale)
+        quotas_all = self.bank.tick_quotas()
+        quotas = tuple(quotas_all[s] for s in live)
+        thresholds = tuple(self.bank.switchers[s].thresholds for s in live)
+        batch = jnp.stack(frames)
+        caps = self._caps_for_tick(geom, p, batch, thresholds, quotas)
+        fn = fused_stream_frame_fn(geom, len(live), caps, eng.cfg,
+                                   eng.backend, p.interpret, eng.mesh,
+                                   eng.qpack)
+        compiled = eng._mark_warm(("mux", geom.cache_key, len(live), caps,
+                                   p.interpret))
+        t1s = jnp.asarray([t[0] for t in thresholds], jnp.float32)
+        t2s = jnp.asarray([t[1] for t in thresholds], jnp.float32)
+        outs = fn(eng.params, batch, t1s, t2s,
+                  jnp.asarray(quotas, jnp.int32))
+        return {"outs": outs, "geom": geom, "plan": p, "live": tuple(live),
+                "t0": t0, "compiled": compiled}
+
+    def _caps_for_tick(self, geom, p, batch, thresholds, quotas
+                       ) -> Tuple[int, ...]:
+        """Aggregate capacity profile for one tick. ``plan.capacity`` pins
+        the PER-STREAM profile (scaled by the live count — the knob should
+        not need to know how many tenants are up); otherwise the first tick
+        of a (geometry, live-count) is probed on the host and the profile
+        cached in the engine's fused-caps map, grown after spills like the
+        solo path. The C54 entry is clamped per call to the sum of the live
+        streams' quotas — the aggregate hard ceiling the in-graph per-stream
+        quotas already enforce, so the clamp never adds spills, it only
+        keeps the compiled pool from outgrowing the budget."""
+        eng = self.engine
+        n_live = len(quotas)
+        widths = eng.cfg.subnet_widths()
+        if p.capacity is not None:
+            if len(p.capacity) != len(widths):
+                raise ValueError(
+                    f"plan.capacity {p.capacity} must have one entry per "
+                    f"subnet width {widths}")
+            return tuple(int(c) * n_live for c in p.capacity)
+        key = ("mux", geom.cache_key, n_live)
+        caps = eng._fused_caps.get(key)
+        if caps is None:
+            # the one host routing sync multiplexed serving ever pays, per
+            # (geometry, live-count): probe aggregate demand under each
+            # stream's live thresholds
+            patches = jax.vmap(geom.extract)(batch)
+            flat = patches.reshape((-1,) + patches.shape[2:])
+            scores = np.asarray(edge_score(flat)).reshape(n_live, geom.n)
+            agg = np.zeros(len(widths), np.int64)
+            for i, (t1, t2) in enumerate(thresholds):
+                agg += np.asarray(
+                    sp.subnet_counts(sp.decide(scores[i], t1, t2)))
+            caps = self._snap(agg, geom, p, n_live)
+            eng._fused_caps[key] = caps
+        return caps[:-1] + (min(caps[-1], int(sum(quotas))),)
+
+    def _snap(self, desired, geom, p, n_live: int) -> Tuple[int, ...]:
+        """Aggregate desired counts -> pool profile: bilinear lane dense
+        (entry 0), conv entries snapped to the bucket ladder, clamped to the
+        tick's total patch count."""
+        return tuple([0] + [snap_capacity(int(d), p.buckets,
+                                          n_live * geom.n)
+                            for d in desired[1:]])
+
+    def _grow(self, key, p, geom, n_live: int, counts_agg, spills_agg
+              ) -> None:
+        """Grow-only aggregate capacity growth after a tick that spilled,
+        mirroring the engine's ``_grow_caps`` (quota demotions register as
+        C54 spills but the per-call quota clamp keeps the served C54 entry
+        at the budget, so growth there never churns recompiles)."""
+        if p.capacity is not None or not any(spills_agg[1:]):
+            return
+        old = self.engine._fused_caps.get(key)
+        if old is None:
+            return
+        desired = [c + s for c, s in zip(counts_agg, spills_agg)]
+        new = self._snap(desired, geom, p, n_live)
+        merged = tuple(max(o, n) for o, n in zip(old, new))
+        if merged != old:
+            self.engine._fused_caps[key] = merged
+
+    def _finalize_tick(self, rec: dict) -> List[FrameResult]:
+        """Block on one in-flight tick, split its outputs per stream, and
+        run the deferred host-side control: per-stream Algorithm-1 trim from
+        the materialized counts, share-weighted overload attribution on a
+        missed tick deadline, and aggregate capacity growth after spill."""
+        eng = self.engine
+        images, eff, scores, counts, spills = rec["outs"]
+        images.block_until_ready()
+        done = time.perf_counter()
+        # marginal tick time, same clock as the engine's fused stream: under
+        # inflight >= 2 a tick's launch-to-ready wall time includes earlier
+        # in-flight ticks' device time
+        dt = done - max(rec["t0"], eng._fused_last_done)
+        eng._fused_last_done = done
+        live, geom, p = rec["live"], rec["geom"], rec["plan"]
+        n = geom.n
+        counts_np = np.asarray(counts)           # (live, n_subnets)
+        spills_np = np.asarray(spills)
+        self._grow(("mux", geom.cache_key, len(live)), p, geom, len(live),
+                   counts_np.sum(0).tolist(), spills_np.sum(0).tolist())
+        macs = (eng._macs if p.patch == eng.plan.patch
+                else sp.SubnetMacs.make(eng.cfg, p.patch))
+        # per-stream trim first (each controller sees its own frame), then
+        # the shared-deadline attribution on top — the same order as the
+        # solo streaming path (observe_frame, then straggler demotion)
+        for i, s in enumerate(live):
+            self.bank.observe(s, int(counts_np[i][sp.C54]))
+        missed = bool(eng.deadline_s and dt > eng.deadline_s)
+        costs = [float(macs.total(tuple(int(c) for c in counts_np[i])))
+                 for i in range(len(live))]
+        demoted = self.bank.note_tick(missed, costs, streams=live)
+        results: List[FrameResult] = []
+        for i, s in enumerate(live):
+            counts_t = tuple(int(c) for c in counts_np[i])
+            out = FrameResult(
+                image=images[i], mode="edge_select",
+                backend=eng._backend_label(p),
+                # per-stream slices of the flat (stream-major) telemetry;
+                # kept as lazy device arrays like the solo fused path
+                ids=eff[i * n:(i + 1) * n],
+                scores=scores[i * n:(i + 1) * n],
+                counts=counts_t, mac_saving=macs.saving_vs_c54(counts_t),
+                latency_s=dt,
+                thresholds=self.bank.switchers[s].thresholds,
+                deadline_missed=bool(demoted[s]),
+                dispatch="fused",
+                spill_counts=tuple(int(x) for x in spills_np[i]),
+                compiled=rec["compiled"], shards=eng.plan.shards,
+                stream_id=s)
+            eng.stats.append(dataclasses.replace(out, image=None,
+                                                 ids=None, scores=None))
+            results.append(out)
+        return results

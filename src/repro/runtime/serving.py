@@ -1,108 +1,23 @@
-"""SR frame-serving runtime — DEPRECATED shim over `repro.api.SREngine`.
-
-The serving loop (frame stream -> AdaptiveSwitcher (Algorithm 1) ->
-edge-selective SR -> fused frame, with deadline/straggler handling) now
-lives in ``SREngine.stream`` / ``SREngine.serve``. `FrameServer` remains as
-a thin compatibility wrapper so existing call sites keep working; new code
-should construct an `SREngine` directly:
+"""Retired serving shim — frame serving lives on `repro.api.SREngine`.
 
     from repro.api import SREngine, ExecutionPlan
     engine = SREngine(params, cfg, plan=ExecutionPlan(), switching=sw)
-    for result in engine.stream(frames): ...
+    for result in engine.stream(frames): ...          # one tenant
+    for result in engine.serve_streams(iterables):    # N tenants, one fused
+        ...                                           # dispatch per tick
+        # (plan=ExecutionPlan(streams=N, dispatch="fused"))
+
+`FrameServer` spent one release as a DeprecationWarning wrapper over
+`SREngine`; it is now a raising alias so stale call sites fail loudly with
+the migration path instead of silently forking serving behavior.
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
-from typing import Any, Dict, List, Optional
 
-from repro.api.engine import SREngine
-from repro.api.plan import ExecutionPlan
-from repro.api.result import summarize_stats
-from repro.core.adaptive import AdaptiveSwitcher, SwitchingConfig
-from repro.models.essr import ESSRConfig
-
-
-@dataclasses.dataclass
-class FrameStats:
-    counts: tuple
-    mac_saving: float
-    latency_s: float
-    thresholds: tuple
-    deadline_missed: bool
-
-
-class FrameServer:
-    """Deprecated: use ``repro.api.SREngine`` (see module docstring)."""
-
-    def __init__(self, params, cfg: ESSRConfig,
-                 switching: Optional[SwitchingConfig] = None,
-                 patch: int = 32, overlap: int = 2,
-                 deadline_s: Optional[float] = None, shards: int = 1):
-        warnings.warn(
-            "FrameServer is deprecated; use repro.api.SREngine.stream()",
-            DeprecationWarning, stacklevel=2)
-        self.engine = SREngine(params, cfg,
-                               plan=ExecutionPlan(patch=patch, overlap=overlap,
-                                                  shards=shards),
-                               switching=switching, deadline_s=deadline_s)
-        self._stats: List[FrameStats] = []       # incremental mirror
-        self._mirrored = 0                       # engine records consumed
-
-    # old attribute surface, delegated ---------------------------------------
-
-    @property
-    def params(self):
-        return self.engine.params
-
-    @property
-    def cfg(self) -> ESSRConfig:
-        return self.engine.cfg
-
-    @property
-    def switcher(self) -> AdaptiveSwitcher:
-        return self.engine.switcher
-
-    @property
-    def deadline_s(self) -> Optional[float]:
-        return self.engine.deadline_s
-
-    @property
-    def patch(self) -> int:
-        return self.engine.plan.patch
-
-    @property
-    def overlap(self) -> int:
-        return self.engine.plan.overlap
-
-    @property
-    def stats(self) -> List[FrameStats]:
-        # engine.stats is a bounded deque now (plan.stats_window); mirror by
-        # the engine's monotone append counter, not by deque length — once
-        # the deque rotates at its maxlen, length stops moving while records
-        # keep arriving. Frames that rotated out between refreshes are gone
-        # (serve_frame refreshes eagerly, so that needs a window-sized gap).
-        fresh = self.engine.stats_total - self._mirrored
-        new = list(self.engine.stats)[-fresh:] if fresh > 0 else []
-        self._mirrored = self.engine.stats_total
-        self._stats.extend(FrameStats(r.counts, r.mac_saving, r.latency_s,
-                                      r.thresholds, r.deadline_missed)
-                           for r in new)
-        return self._stats
-
-    @stats.setter
-    def stats(self, value: List[FrameStats]) -> None:
-        # old code allowed `server.stats = []` to reset a stats window
-        self._stats = value if isinstance(value, list) else list(value)
-        self._mirrored = self.engine.stats_total
-
-    def serve_frame(self, frame) -> Any:
-        image = self.engine.serve(frame).image
-        _ = self.stats      # eager refresh: held references see the append,
-        return image        # matching the old in-place list semantics
-
-    def summary(self) -> Dict[str, Any]:
-        # computed from self.stats (not engine.summary()) so old reset
-        # patterns (`server.stats = []`) window the aggregate as before,
-        # and without the post-SREngine "backend" key
-        return summarize_stats(self.stats)
+def FrameServer(*args, **kwargs):
+    raise RuntimeError(
+        "runtime.serving.FrameServer was removed: construct repro.api.SREngine "
+        "and use engine.stream(frames) for one tenant, or "
+        "engine.serve_streams(iterables) with ExecutionPlan(streams=N, "
+        "dispatch='fused') for multi-tenant serving (see docs/api.md "
+        "'Multi-stream serving')")

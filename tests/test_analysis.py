@@ -129,6 +129,35 @@ def test_essr201_suppression_marker():
     assert lint_source(src, "src/repro/core/legacy.py") == []
 
 
+def test_essr206_stream_entry_point_detected():
+    src = textwrap.dedent("""
+        def serve_many(params, streams, cfg):
+            return streams
+    """)
+    vs = lint_source(src, "src/repro/runtime/newmux.py")
+    assert "ESSR206" in codes(vs)
+    # an engine-riding free function is the same hazard
+    assert "ESSR206" in codes(lint_source(textwrap.dedent("""
+        def multiplex(engine, frame_streams):
+            return frame_streams
+    """), "src/repro/runtime/newmux.py"))
+    # legal inside the api package, when private, or as a method
+    assert lint_source(src, "src/repro/api/newmux.py") == []
+    assert "ESSR206" not in codes(lint_source(
+        src.replace("serve_many", "_serve_many"),
+        "src/repro/runtime/newmux.py"))
+    assert "ESSR206" not in codes(lint_source(textwrap.dedent("""
+        class Mux:
+            def serve(self, params, streams):
+                return streams
+    """), "src/repro/runtime/newmux.py"))
+    # a stream bundle without params/engine is not a serving entry point
+    assert "ESSR206" not in codes(lint_source(textwrap.dedent("""
+        def zip_streams(streams):
+            return streams
+    """), "src/repro/runtime/newmux.py"))
+
+
 def test_essr202_numpy_in_traced_body_detected():
     src = textwrap.dedent("""
         import numpy as np
@@ -250,7 +279,7 @@ def test_report_roundtrip_and_baseline_diff(tmp_path):
 
 
 def test_rule_catalog_covers_all_passes():
-    assert len(RULES) == 14
+    assert len(RULES) == 15
     assert {c[:5] for c in RULES} == {"ESSR1", "ESSR2", "ESSR3"}
     # the registry is the single source: the rendered docs rows and the
     # committed docs catalog both carry every code

@@ -1,6 +1,4 @@
 """SREngine facade, ExecutionPlan, bucket padding, and deprecation shims."""
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,6 +40,49 @@ def test_plan_validation():
         ExecutionPlan(buckets=())
     with pytest.raises(ValueError):
         ExecutionPlan(buckets=(128, 8))
+
+
+def test_plan_validation_error_format():
+    """Every rule — per-field and cross-field — raises the one error shape:
+    field name, got-value, allowed set."""
+    cases = [
+        (dict(subnet_policy="nope"), "ExecutionPlan.subnet_policy='nope'"),
+        (dict(patch=16, overlap=16), "ExecutionPlan.overlap=16"),
+        (dict(t1=40, t2=8), "ExecutionPlan.t2=8"),
+        (dict(buckets=()), "ExecutionPlan.buckets=()"),
+        (dict(inflight=2), "ExecutionPlan.inflight=2"),
+        (dict(streams=2), "ExecutionPlan.streams=2"),
+        (dict(streams=0, dispatch="fused"), "ExecutionPlan.streams=0"),
+        (dict(streams=2, dispatch="fused", subnet_policy="all_c54"),
+         "ExecutionPlan.streams=2"),
+        (dict(streams=2, dispatch="fused", stream_shares=(1.0,)),
+         "ExecutionPlan.stream_shares=(1.0,)"),
+        (dict(stream_shares=(0.0,)), "ExecutionPlan.stream_shares=(0.0,)"),
+    ]
+    for kwargs, prefix in cases:
+        with pytest.raises(ValueError, match=r"allowed ") as ei:
+            ExecutionPlan(**kwargs)
+        assert str(ei.value).startswith(prefix), (kwargs, str(ei.value))
+
+
+def test_plan_capacity_coercion_chains_cause():
+    """The capacity coercion failure is chained (`raise ... from e`) so the
+    non-int-iterable root cause survives — the former bare re-raise hid it."""
+    with pytest.raises(ValueError) as ei:
+        ExecutionPlan(capacity=("a", "b", "c"))   # iterable, non-int entries
+    assert "ExecutionPlan.capacity=" in str(ei.value)
+    assert isinstance(ei.value.__cause__, ValueError)
+    with pytest.raises(ValueError) as ei:
+        ExecutionPlan(capacity=object())          # not iterable at all
+    assert isinstance(ei.value.__cause__, TypeError)
+    with pytest.raises(ValueError):
+        ExecutionPlan(capacity=(0, -1, 4))        # int but out of bounds
+
+
+def test_plan_streams_normalizes_shares():
+    p = ExecutionPlan(streams=2, dispatch="fused", stream_shares=[3, 1])
+    assert p.stream_shares == (3.0, 1.0)          # tuple-coerced, hashable
+    assert ExecutionPlan(streams=4, dispatch="fused").stream_shares is None
 
 
 def test_plan_replace_and_decide():
@@ -233,33 +274,20 @@ def test_plan_interpret_and_geometry():
 
 # -- deprecation shims -------------------------------------------------------
 
-def test_frame_server_shim_warns_and_serves(lr_frame):
+def test_frame_server_alias_raises_with_migration_path():
+    """The retired shim fails loudly and names the replacements — stale call
+    sites must not silently fork serving behavior."""
     from repro.runtime.serving import FrameServer
     params = init_essr(jax.random.PRNGKey(0), CFG)
-    with pytest.warns(DeprecationWarning):
-        server = FrameServer(params, CFG, SwitchingConfig(fps=2))
-    held = server.stats                 # reference held BEFORE serving
-    img = server.serve_frame(lr_frame)
-    assert img.shape == (128, 128, 3)
-    assert server.summary()["frames"] == 1
-    assert len(held) == 1              # old in-place list semantics preserved
-    assert len(server.stats) == 1 and server.stats[0].counts == \
-        server.engine.stats[0].counts
-    assert isinstance(server.switcher, AdaptiveSwitcher)
-    assert (server.patch, server.overlap) == (32, 2)   # old public attrs
-    assert "backend" not in server.summary()
-    server.stats = []                  # old reset-window pattern still works
-    assert server.summary() == {} and len(server.stats) == 0
-    server.serve_frame(lr_frame)
-    assert server.summary()["frames"] == 1
+    with pytest.raises(RuntimeError, match=r"serve_streams"):
+        FrameServer(params, CFG)
+    with pytest.raises(RuntimeError, match=r"SREngine"):
+        FrameServer()
 
 
 def test_switching_config_not_shared():
     a, b = AdaptiveSwitcher(), AdaptiveSwitcher()
     assert a.cfg is not b.cfg
-    from repro.runtime.serving import FrameServer
     params = init_essr(jax.random.PRNGKey(0), CFG)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        s1, s2 = FrameServer(params, CFG), FrameServer(params, CFG)
-    assert s1.switcher.cfg is not s2.switcher.cfg
+    e1, e2 = SREngine(params, CFG), SREngine(params, CFG)
+    assert e1.switcher.cfg is not e2.switcher.cfg

@@ -295,25 +295,20 @@ def test_stream_enforces_c54_budget_even_when_seeded_by_upscale():
     assert r_pin.counts == GOLDEN_COUNTS and r_pin.spill_counts == (0, 0, 0)
 
 
-def test_frame_server_mirror_survives_window_rotation():
-    """The deprecated FrameServer shim mirrors engine.stats by the monotone
-    append counter: records must keep flowing after the bounded deque
-    rotates at stats_window (review regression)."""
+def test_stats_window_rotation():
+    """engine.stats is a bounded deque: after rotation summary() covers the
+    newest stats_window frames, and the retired shim's monotone mirror
+    counter is gone from the engine surface."""
     from repro.models.essr import init_essr
-    from repro.runtime.serving import FrameServer
     params = init_essr(jax.random.PRNGKey(0), CFG)
-    with pytest.warns(DeprecationWarning):
-        server = FrameServer(params, CFG, _stable_switching())
-    server.engine = SREngine(params, CFG,
-                             plan=ExecutionPlan(stats_window=2),
-                             switching=_stable_switching())
+    engine = SREngine(params, CFG, plan=ExecutionPlan(stats_window=2),
+                      switching=_stable_switching())
     frame = _golden_frame()
     for _ in range(4):
-        server.serve_frame(frame)
-    assert len(server.engine.stats) == 2          # deque rotated
-    assert server.engine.stats_total == 4
-    assert len(server.stats) == 4                 # mirror kept every frame
-    assert server.summary()["frames"] == 4
+        engine.serve(frame)
+    assert len(engine.stats) == 2                 # deque rotated
+    assert engine.summary()["frames"] == 2
+    assert not hasattr(engine, "stats_total")     # mirror plumbing deleted
 
 
 # ---------------------------------------------------------------------------

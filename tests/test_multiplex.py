@@ -1,0 +1,268 @@
+"""Multi-stream continuous batching (`plan.streams` / SREngine.serve_streams).
+
+Contract under test (docs/api.md "Multi-stream serving"):
+
+  * N interleaved tenant streams through ONE fused dispatch per admission
+    tick are bit-equal (ref backend) to serving each stream on its own solo
+    engine — shared capacity pool, independent scatter-back;
+  * round-robin admission under equal shares is fair: one frame per live
+    tenant per tick, results in stream-id order within a tick;
+  * under aggregate overload, per-stream C54 shares degrade in
+    ``stream_shares`` proportion, raster-deterministically, never dropping
+    frames;
+  * per-stream switcher isolation: one tenant's overload never demotes
+    another tenant's thresholds (share-weighted cost attribution);
+  * ``plan.streams=1`` serve_streams is byte-identical to ``stream()``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExecutionPlan, SREngine
+from repro.core import subnet_policy as sp
+from repro.core.adaptive import (StreamSwitcherBank, SwitchingConfig,
+                                 per_stream_config)
+from repro.data.synthetic import degrade, random_image
+from repro.models.essr import ESSRConfig, init_essr
+
+CFG = ESSRConfig(scale=2)
+HW = 64                                     # 64x64 LR -> 9 patches
+
+
+def _stable_switching():
+    return SwitchingConfig(frame_high=10**9, frame_low=0)
+
+
+def _texture_frame(seed: int):
+    """Degraded random texture: routes (almost) entirely C54."""
+    return degrade(jnp.asarray(random_image(seed, 2 * HW, 2 * HW)), 2)
+
+
+def _smooth_frame():
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, HW), jnp.linspace(0, 1, HW),
+                          indexing="ij")
+    return jnp.stack([yy, xx, (yy + xx) / 2], axis=-1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_essr(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def tenant_streams():
+    return [[_texture_frame(s * 100 + i) for i in range(3)]
+            for s in range(4)]
+
+
+# -- bit-equality vs solo engines -------------------------------------------
+
+def test_four_streams_bit_equal_to_solo(params, tenant_streams):
+    # capacity pinned on both sides: with auto profiles the shared pool
+    # lends a tenant the others' slack (statistical multiplexing — a mux
+    # stream can spill LESS than its solo engine), which is the feature,
+    # not a conformance target. Adequate pinned capacity removes spills
+    # from both paths, so routing and images must match exactly.
+    plan = ExecutionPlan(streams=4, dispatch="fused", capacity=(0, 9, 9))
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching())
+    mux = list(eng.serve_streams(tenant_streams))
+    assert len(mux) == 12
+    for s in range(4):
+        solo = SREngine(params, CFG,
+                        plan=ExecutionPlan(dispatch="fused",
+                                           capacity=(0, 9, 9)),
+                        switching=_stable_switching())
+        solo_results = list(solo.stream(tenant_streams[s]))
+        mine = [r for r in mux if r.stream_id == s]
+        assert len(mine) == len(solo_results) == 3
+        for rm, rs in zip(mine, solo_results):
+            assert bool(jnp.all(rm.image == rs.image))      # ref: bit-equal
+            assert np.array_equal(np.asarray(rm.ids), np.asarray(rs.ids))
+            assert rm.counts == rs.counts
+            assert rm.dispatch == "fused"
+
+
+def test_streams_quant_allclose_to_solo(params, tenant_streams):
+    """The shared executable also shares the PTQ pack: quantized multi-stream
+    serving matches the quantized solo path."""
+    plan = ExecutionPlan(streams=2, dispatch="fused", quant="fxp10",
+                         capacity=(0, 9, 9))
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching())
+    mux = list(eng.serve_streams([tenant_streams[0][:2],
+                                  tenant_streams[1][:2]]))
+    assert eng.qpack is not None
+    for s in range(2):
+        solo = SREngine(params, CFG,
+                        plan=ExecutionPlan(dispatch="fused", quant="fxp10",
+                                           capacity=(0, 9, 9)),
+                        switching=_stable_switching())
+        solo_results = list(solo.stream(tenant_streams[s][:2]))
+        mine = [r for r in mux if r.stream_id == s]
+        for rm, rs in zip(mine, solo_results):
+            assert bool(jnp.all(rm.image == rs.image))
+            assert rm.backend == rs.backend == "ref-fxp10"
+
+
+# -- admission model ---------------------------------------------------------
+
+def test_round_robin_admission_order_and_fairness(params, tenant_streams):
+    plan = ExecutionPlan(streams=4, dispatch="fused")
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching())
+    mux = list(eng.serve_streams(tenant_streams))
+    # one frame per tenant per tick, stream-id order within a tick
+    assert [r.stream_id for r in mux] == [0, 1, 2, 3] * 3
+    summ = eng.summary()
+    assert {sid: rec["frames"] for sid, rec in summ["streams"].items()} == \
+        {0: 3, 1: 3, 2: 3, 3: 3}
+
+
+def test_ragged_streams_shrink_the_tick(params, tenant_streams):
+    """An exhausted tenant leaves the admission tick; the rest keep serving
+    (no dropped frames, no padding tenants)."""
+    plan = ExecutionPlan(streams=3, dispatch="fused")
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching())
+    streams = [tenant_streams[0][:3], tenant_streams[1][:1],
+               tenant_streams[2][:2]]
+    got = [r.stream_id for r in eng.serve_streams(streams)]
+    assert got == [0, 1, 2, 0, 2, 0]
+    assert eng.summary()["frames"] == 6
+
+
+def test_mixed_shapes_in_one_tick_rejected(params):
+    plan = ExecutionPlan(streams=2, dispatch="fused")
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching())
+    bad = [[_texture_frame(0)], [_texture_frame(1)[:32]]]
+    with pytest.raises(ValueError, match=r"one admission tick packs one "
+                                         r"geometry"):
+        list(eng.serve_streams(bad))
+
+
+def test_single_iterable_apis_refuse_multi_stream_plans(params):
+    plan = ExecutionPlan(streams=2, dispatch="fused")
+    eng = SREngine(params, CFG, plan=plan)
+    with pytest.raises(ValueError, match=r"serve_streams"):
+        eng.serve(_texture_frame(0))
+    with pytest.raises(ValueError, match=r"serve_streams"):
+        list(eng.stream([_texture_frame(0)]))
+    with pytest.raises(ValueError, match=r"serve_streams got 1 streams"):
+        list(eng.serve_streams([[_texture_frame(0)]]))
+
+
+def test_streams_one_serve_streams_is_stream(params, tenant_streams):
+    """plan.streams=1 keeps today's single-tenant path byte-for-byte."""
+    a = SREngine(params, CFG, plan=ExecutionPlan(dispatch="fused"),
+                 switching=_stable_switching())
+    b = SREngine(params, CFG, plan=ExecutionPlan(dispatch="fused"),
+                 switching=_stable_switching())
+    ra = list(a.serve_streams([tenant_streams[0]]))
+    rb = list(b.stream(tenant_streams[0]))
+    for x, y in zip(ra, rb):
+        assert bool(jnp.all(x.image == y.image))
+        assert x.stream_id is None and y.stream_id is None
+        assert x.counts == y.counts and x.thresholds == y.thresholds
+    assert a.summary().keys() == b.summary().keys()   # no streams section
+
+
+# -- QoS: shares, overload degradation, isolation ----------------------------
+
+def test_share_weighted_c54_degradation_is_deterministic(params,
+                                                         tenant_streams):
+    """Aggregate overload: each tenant's C54 slots degrade to its share of
+    the budget (3:1 here), raster-deterministically, frames never dropped."""
+    overload = SwitchingConfig(c54_per_sec_budget=8, fps=1,
+                               frame_high=10**9, frame_low=0)
+    plan = ExecutionPlan(streams=2, dispatch="fused",
+                         stream_shares=(3.0, 1.0))
+    runs = []
+    for _ in range(2):
+        eng = SREngine(params, CFG, plan=plan, switching=overload)
+        res = list(eng.serve_streams([tenant_streams[0][:2],
+                                      tenant_streams[1][:2]]))
+        runs.append([(r.stream_id, r.counts, r.spill_counts) for r in res])
+        # every admitted frame came back
+        assert [r.stream_id for r in res] == [0, 1, 0, 1]
+        for r in res:
+            # shares 3:1 over budget 8 -> quotas (6, 2): C54 capped per
+            # stream at its share; demoted patches run C27, not dropped
+            quota = 6 if r.stream_id == 0 else 2
+            native = r.counts[sp.C54] + r.spill_counts[sp.C54]  # wanted C54
+            assert r.counts[sp.C54] == min(native, quota)
+            assert sum(r.counts) == 9                 # nothing dropped
+        # the privileged tenant keeps more of its C54 demand every tick
+        assert all(a.counts[sp.C54] >= b.counts[sp.C54]
+                   for a, b in zip(res[0::2], res[1::2]))
+        assert any(r.spill_counts[sp.C54] > 0 for r in res)  # overload real
+    assert runs[0] == runs[1]                         # deterministic
+
+
+def test_per_stream_switcher_isolation(params, tenant_streams):
+    """Tick deadlines are shared, but attribution is share-weighted: the
+    heavy tenant is demoted, the light tenant's thresholds never move."""
+    plan = ExecutionPlan(streams=2, dispatch="fused", t1=8.0, t2=40.0)
+    eng = SREngine(params, CFG, plan=plan, switching=_stable_switching(),
+                   deadline_s=1e-9)                   # every tick misses
+    heavy = tenant_streams[0][:3]
+    light = [_smooth_frame()] * 3
+    res = list(eng.serve_streams([heavy, light]))
+    h = [r for r in res if r.stream_id == 0]
+    l = [r for r in res if r.stream_id == 1]
+    assert all(r.deadline_missed for r in h)          # attributed heavy
+    assert not any(r.deadline_missed for r in l)      # never blamed
+    assert h[-1].thresholds > (8.0, 40.0)             # demoted
+    assert l[-1].thresholds == (8.0, 40.0)            # untouched
+    summ = eng.summary()
+    assert summ["streams"][0]["deadline_misses"] == 3
+    assert summ["streams"][1]["deadline_misses"] == 0
+
+
+def test_stream_bank_attribution_unit():
+    bank = StreamSwitcherBank(SwitchingConfig(t1=8, t2=40), streams=3,
+                              shares=(1.0, 1.0, 2.0))
+    assert bank.shares == (0.25, 0.25, 0.5)
+    base = bank.thresholds
+    # no miss: nobody demoted
+    assert bank.note_tick(False, [100, 100, 200]) == (False, False, False)
+    assert bank.thresholds == base
+    # miss with cost exactly in share proportion: every live stream demotes
+    assert bank.note_tick(True, [100, 100, 200]) == (True, True, True)
+    # miss with stream 0 over its entitlement: only stream 0 demoted
+    t_before = bank.thresholds
+    assert bank.note_tick(True, [400, 100, 200]) == (True, False, False)
+    after = bank.thresholds
+    assert after[0] > t_before[0]
+    assert after[1] == t_before[1] and after[2] == t_before[2]
+    # live-subset form: costs map onto the named streams only
+    assert bank.note_tick(True, [100, 500], streams=(1, 2)) == \
+        (False, False, True)
+
+
+def test_per_stream_config_split():
+    cfg = SwitchingConfig(c54_per_sec_budget=1000, frame_high=100,
+                          frame_low=0, fps=10)
+    half = per_stream_config(cfg, 0.5)
+    assert (half.c54_per_sec_budget, half.frame_high) == (500, 50)
+    assert half.frame_low == 0                        # 0 stays 0
+    tiny = per_stream_config(cfg, 1e-6)
+    assert tiny.c54_per_sec_budget == 1               # floored, still adapts
+    assert per_stream_config(cfg, 1.0) is cfg
+    with pytest.raises(ValueError):
+        per_stream_config(cfg, 0.0)
+    bank = StreamSwitcherBank(cfg, streams=2, shares=(1.0, 1.0))
+    assert bank.tick_quotas() == (50, 50)             # budget/share/fps
+
+
+# -- async composition --------------------------------------------------------
+
+def test_inflight_ticks_match_synchronous(params, tenant_streams):
+    plan_sync = ExecutionPlan(streams=4, dispatch="fused")
+    plan_async = ExecutionPlan(streams=4, dispatch="fused", inflight=3)
+    a = SREngine(params, CFG, plan=plan_sync, switching=_stable_switching())
+    b = SREngine(params, CFG, plan=plan_async, switching=_stable_switching())
+    ra = list(a.serve_streams(tenant_streams))
+    rb = list(b.serve_streams(tenant_streams))
+    assert [r.stream_id for r in ra] == [r.stream_id for r in rb]
+    for x, y in zip(ra, rb):
+        assert bool(jnp.all(x.image == y.image))
+        assert x.counts == y.counts

@@ -3,10 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SREngine
 from repro.core.adaptive import SwitchingConfig
 from repro.data.synthetic import degrade, patch_batches, random_image
 from repro.models.essr import ESSRConfig, init_essr
-from repro.runtime.serving import FrameServer
 from repro.train import optimizer as O
 from repro.train import losses as Ls
 from repro.train.trainer import make_grad_accum_step, train_essr_supernet
@@ -98,17 +98,18 @@ def test_gan_steps_run():
     assert np.isfinite(float(gl)) and np.isfinite(float(dl))
 
 
-def test_frame_server_end_to_end():
+def test_stream_end_to_end():
     cfg = ESSRConfig(scale=2)
     params = init_essr(jax.random.PRNGKey(0), cfg)
-    server = FrameServer(params, cfg,
-                         SwitchingConfig(c54_per_sec_budget=3, frame_high=2,
-                                         frame_low=1, fps=2))
-    for i in range(3):
-        hr = jnp.asarray(random_image(i, 128, 128))
-        sr = server.serve_frame(degrade(hr, 2))
-        assert sr.shape == (128, 128, 3)
-    s = server.summary()
+    engine = SREngine(params, cfg,
+                      switching=SwitchingConfig(c54_per_sec_budget=3,
+                                                frame_high=2, frame_low=1,
+                                                fps=2))
+    frames = (degrade(jnp.asarray(random_image(i, 128, 128)), 2)
+              for i in range(3))
+    for r in engine.stream(frames):
+        assert r.image.shape == (128, 128, 3)
+    s = engine.summary()
     assert s["frames"] == 3
     assert abs(sum(s["subnet_share"].values()) - 1.0) < 1e-3
 
