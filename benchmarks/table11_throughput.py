@@ -19,17 +19,23 @@
     conformance across backends and int8 quant — recorded into the same
     JSON and gated by scripts/bench_gate.py (fused must never be slower
     than host beyond tolerance),
-(e) a multi-stream sweep (``ExecutionPlan.streams``): N tenant streams
+(e) a fusion sweep (``ExecutionPlan.fusion``): the layer-fused per-op
+    kernel stack vs the group-fused subnet megakernel on the same mixed
+    frame — interleaved best-of wall time (group must never lose beyond
+    tolerance) plus the static ``feature_hbm_bytes`` of both traced chains
+    (priced by analysis/cost_model.py; the >= 50% reduction the gate
+    enforces is the portable form of the paper's 79% claim),
+(f) a multi-stream sweep (``ExecutionPlan.streams``): N tenant streams
     packed into ONE fused dispatch per admission tick
     (``SREngine.serve_streams``) vs N solo fused engines serving the same
     frames — aggregate fps both ways, the mux/solo ratio, and a
     zero-tolerance conformance flag (capacity pinned identically on both
     sides, so the multiplexed outputs must match the solo engines exactly)
     — recorded into the same JSON and gated by scripts/bench_gate.py,
-(f) measured CPU frame throughput per subnet through `SREngine`, once per
+(g) measured CPU frame throughput per subnet through `SREngine`, once per
     backend ("ref" pure-JAX jit vs "pallas" fused kernel groups, interpret
     mode on CPU), exercising the full patch->route->batch->fuse pipeline, and
-(g) the TPU-side projection from the dry-run roofline (results/dryrun),
+(h) the TPU-side projection from the dry-run roofline (results/dryrun),
     i.e. the frames/s one v5e chip supports at the measured bytes/flops.
 Power/gate count are N/A on CPU and stated as such."""
 import argparse
@@ -330,6 +336,100 @@ def _measure_streams(params, cfg, frame, n_streams: int = 4,
     }
 
 
+def _measure_fusion(params, cfg, frame) -> dict:
+    """Layer fusion (per-op kernel stack: BSConv -> 5xSFB -> DSConv, features
+    crossing HBM at every group boundary) vs group fusion (the
+    `kernels/megakernel.py` single launch, features resident in VMEM scratch)
+    on the mixed-routing frame.
+
+    Two signals, both gated by scripts/bench_gate.py:
+
+      * measured: interleaved best-of wall time of the edge-selective frame
+        with ``fusion="layer"`` vs ``fusion="group"`` on the pallas backend —
+        group must never be slower beyond tolerance;
+      * static: `analysis.cost_model.price_jaxpr` over the traced all-C54
+        patch batch through both chains — ``feature_hbm_bytes`` (rank-4
+        activation traffic across HBM) must shrink by >= 50%, the
+        machine-portable form of the paper's 79% inter-group traffic
+        reduction (Table XI rides on exactly this VMEM residency).
+    """
+    from repro.analysis.cost_model import price_jaxpr
+    from repro.core.patching import get_geometry
+    from repro.kernels.megakernel import (autotune_report,
+                                          essr_forward_megakernel,
+                                          essr_forward_qmegakernel)
+    from repro.kernels.ops import essr_forward_kernels
+    from repro.kernels.qconv import essr_forward_qkernels
+    from repro.quant.pams import build_quant_pack
+
+    h, w = int(frame.shape[0]), int(frame.shape[1])
+    g = get_geometry(h, w, 32, 2, cfg.scale)
+    batch = g.extract(frame)          # every patch as C54: the traffic ceiling
+    pack = build_quant_pack(params, cfg, "int8", batch[:16])
+    chains = {
+        "layer": lambda p, x: essr_forward_kernels(p, x, cfg, interpret=True),
+        "group": lambda p, x: essr_forward_megakernel(p, x, cfg,
+                                                      interpret=True),
+        "layer-int8": lambda p, x: essr_forward_qkernels(
+            p, x, cfg, pack=pack, interpret=True),
+        "group-int8": lambda p, x: essr_forward_qmegakernel(
+            p, x, cfg, pack=pack, interpret=True),
+    }
+    static = {}
+    for label, fn in chains.items():
+        c = price_jaxpr(jax.make_jaxpr(fn)(params, batch))
+        static[label] = {"macs": c.macs, "hbm_bytes": c.hbm_bytes,
+                         "feature_hbm_bytes": c.feature_bytes}
+    red_fp = 1.0 - (static["group"]["feature_hbm_bytes"]
+                    / max(static["layer"]["feature_hbm_bytes"], 1))
+    red_q = 1.0 - (static["group-int8"]["feature_hbm_bytes"]
+                   / max(static["layer-int8"]["feature_hbm_bytes"], 1))
+
+    run_layer = lambda: edge_selective_sr(params, frame, cfg,
+                                          backend="pallas",
+                                          fusion="layer").image
+    run_group = lambda: edge_selective_sr(params, frame, cfg,
+                                          backend="pallas",
+                                          fusion="group").image
+    img_l = jax.block_until_ready(run_layer())          # warm both jits
+    img_g = jax.block_until_ready(run_group())
+    allclose = bool(np.allclose(np.asarray(img_l), np.asarray(img_g),
+                                rtol=1e-5, atol=1e-5))
+    # interleaved best-of: machine-load drift shifts both fusion modes
+    # together instead of masquerading as a fusion speedup (same estimator
+    # as the dispatch sweep)
+    us_layer = us_group = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_layer())
+        us_layer = min(us_layer, (time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_group())
+        us_group = min(us_group, (time.perf_counter() - t0) * 1e6)
+    speedup = us_layer / us_group
+    tune = autotune_report(cfg.channels, 32, cfg.scale, cfg.n_sfb)
+    emit("table11_fusion_layer", us_layer, f"fps={1e6 / us_layer:.3f}")
+    emit("table11_fusion_group", us_group,
+         f"fps={1e6 / us_group:.3f};speedup_x={speedup:.2f};"
+         f"allclose={allclose};feature_reduction={red_fp:.3f}")
+    return {
+        "layer": {"us_per_frame": round(us_layer, 1),
+                  "fps": round(1e6 / us_layer, 3)},
+        "group": {"us_per_frame": round(us_group, 1),
+                  "fps": round(1e6 / us_group, 3),
+                  "allclose_vs_layer": allclose},
+        "group_speedup_x": round(speedup, 2),
+        "static_costs": static,
+        # the headline ratios the gate floors at 0.5 (paper: 0.79)
+        "feature_hbm_reduction": round(red_fp, 4),
+        "feature_hbm_reduction_int8": round(red_q, 4),
+        "paper_feature_hbm_reduction": 0.79,
+        # the roofline-driven block pick the megakernel launches with
+        "autotune": {k: (round(v, 3) if isinstance(v, float) else v)
+                     for k, v in tune.items()},
+    }
+
+
 def _dispatch_conformance(params, cfg, hw: int = 96) -> dict:
     """Fused-vs-host allclose across backends and quant on a small mixed
     frame (small because pallas-interpret is the CPU correctness path, not
@@ -419,6 +519,9 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON,
         # host vs fused single-dispatch frame executable (+ async stream)
         # on the same mixed-routing frame, post-warmup
         "dispatch_sweep": _measure_dispatch(params, cfg, mixed),
+        # layer-fused per-op stack vs the group-fused megakernel on the
+        # same mixed frame: measured wall time + static feature-HBM traffic
+        "fusion_sweep": _measure_fusion(params, cfg, mixed),
         "dispatch_conformance": _dispatch_conformance(params, cfg),
         # N tenant streams through one fused dispatch vs N solo engines.
         # Cropped frame: the full mixed frame puts ~113 MB of patch

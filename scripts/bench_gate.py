@@ -26,6 +26,13 @@ and fails when the fresh numbers regress past a tolerance band:
     ratio travels across machines; ``fused_speedup_x`` is banded against
     the committed value like ``speedup_x``.
 
+  * the fusion sweep gates the group-fused subnet megakernel: its output
+    must stay allclose to the layer-fused per-op stack (zero tolerance),
+    its fps must not fall below the layer stack beyond the band (same-run
+    interleaved measurement), and the STATIC ``feature_hbm_bytes`` of the
+    traced group chain must stay at most half the layer chain's (a fixed
+    0.5 floor — structural, machine-portable; the paper claims 0.79).
+
   * the multi-stream sweep gates continuous batching: the multiplexed
     outputs must match the solo engines (zero tolerance — capacity is
     pinned identically on both sides, so there is no legitimate drift),
@@ -152,6 +159,40 @@ def compare(committed: dict, fresh: dict, tol: float,
         elif not got_ok:
             fails.append(f"dispatch_conformance[{label}]: fused output no "
                          f"longer matches host dispatch")
+
+    # -- fusion sweep: group-fused megakernel vs layer-fused per-op stack --
+    want_f = committed.get("fusion_sweep", {})
+    got_f = fresh.get("fusion_sweep", {})
+    if want_f:
+        if not got_f:
+            fails.append("fusion_sweep: missing from fresh run")
+        else:
+            if not got_f.get("group", {}).get("allclose_vs_layer", False):
+                fails.append("fusion_sweep: group-fused megakernel output no "
+                             "longer allclose to the layer-fused stack")
+            # group fusion must never be slower than the per-op stack beyond
+            # the band — interleaved same-run measurement, so the ratio is
+            # machine-portable (mirrors the fused-vs-host dispatch gate)
+            got_layer = got_f.get("layer", {}).get("fps", 0.0)
+            got_group = got_f.get("group", {}).get("fps", 0.0)
+            if got_group < got_layer * (1.0 - tol):
+                fails.append(
+                    f"fusion_sweep: group fps {got_group:.3f} slower than "
+                    f"layer fps {got_layer:.3f} beyond the {tol:.0%} band")
+            # the static feature-HBM reduction is structural (priced from the
+            # traced graphs, not measured), so it gates at a FIXED floor:
+            # features must cross HBM at most half as much as the per-op
+            # stack — the portable form of the paper's 79% claim
+            for key in ("feature_hbm_reduction", "feature_hbm_reduction_int8"):
+                red = got_f.get(key, 0.0)
+                if red < 0.5:
+                    fails.append(
+                        f"fusion_sweep.{key}: {red:.3f} < 0.5 floor "
+                        f"(paper: 0.79 — group fusion stopped keeping "
+                        f"features in VMEM)")
+            band("fusion_sweep.group_speedup_x",
+                 got_f.get("group_speedup_x", 0.0),
+                 want_f.get("group_speedup_x", 0.0))
 
     # NOTE: the shard rows below compare fps against the committed JSON,
     # which was itself produced on a virtual-CPU mesh where shards > 1 run

@@ -10,9 +10,12 @@ prices the traced graph itself — per audited entry point it counts
     (both operands integer-dtyped: the PAMS int8/fxp10 datapath) and fp MACs;
   * HBM bytes: the entry point's own I/O (top-level invars + outvars +
     closed-over consts) plus, per ``pallas_call``, the operand/result blocks
-    each kernel launch moves between HBM and VMEM — the inter-group feature
-    traffic the paper's 79%-reduction claim is about, keyed per kernel so
-    the fused-pipeline report shows which group moves what;
+    each kernel launch moves between HBM and VMEM, keyed per kernel so the
+    fused-pipeline report shows which group moves what. The rank-4
+    patch-batch operands/results of each launch are additionally broken out
+    as ``feature_hbm_bytes`` — the inter-group activation traffic the
+    paper's 79%-reduction claim is about, and the quantity the group-fused
+    megakernel (`kernels/megakernel.py`) collapses to entry+exit only;
   * arithmetic intensity: MACs / HBM bytes.
 
 ``scan`` bodies are multiplied by their trip count; a ``while`` has no
@@ -80,6 +83,7 @@ class EntryCost:
     int_macs: int = 0
     io_bytes: int = 0
     pallas_bytes: int = 0
+    feature_bytes: int = 0
     pallas_traffic: Dict[str, int] = dataclasses.field(default_factory=dict)
     while_unbounded: bool = False
 
@@ -95,6 +99,7 @@ class EntryCost:
             "int_macs": self.int_macs,
             "io_bytes": self.io_bytes,
             "pallas_bytes": self.pallas_bytes,
+            "feature_hbm_bytes": self.feature_bytes,
             "hbm_bytes": hbm,
             "arith_intensity": (self.macs / hbm) if hbm else 0.0,
             "pallas_traffic": dict(sorted(self.pallas_traffic.items())),
@@ -102,21 +107,40 @@ class EntryCost:
         }
 
 
-def _pallas_call_bytes(eqn) -> Tuple[str, int]:
-    """(kernel name, HBM<->VMEM bytes one launch of this pallas_call moves):
-    the union of its operand and result arrays."""
+#: every kernel in this repo streams its activations as rank-4 patch-batch
+#: tensors (N, h, w, C) while weights/biases/scales ride as rank <= 3
+#: stationary operands — rank is therefore the structural feature/weight
+#: discriminator (block-shape vs array-shape would misclassify single-step
+#: grids, where every block covers its whole array).
+_FEATURE_RANK = 4
+
+
+def _pallas_call_bytes(eqn) -> Tuple[str, int, int]:
+    """(kernel name, total HBM<->VMEM bytes one launch of this pallas_call
+    moves, the FEATURE subset of those bytes): the union of its operand and
+    result arrays, with rank-4 patch-batch tensors counted as feature
+    (activation) traffic — the inter-group bytes the paper's 79%-reduction
+    claim is about. A layer-fused chain pays feature traffic at every group
+    boundary; the group-fused megakernel holds features in VMEM scratch and
+    pays it only at the chain's entry and exit."""
     gm = eqn.params["grid_mapping"]
-    total = 0
+    total = feat = 0
     for bm in getattr(gm, "block_mappings", ()):
         sds = getattr(bm, "array_shape_dtype", None)
         if sds is not None:
-            total += _nelems(sds.shape) * np.dtype(sds.dtype).itemsize
+            b = _nelems(sds.shape) * np.dtype(sds.dtype).itemsize
+            total += b
+            if len(sds.shape) >= _FEATURE_RANK:
+                feat += b
     if total == 0:                     # fallback: eqn-level avals
-        total = sum(_aval_bytes(v.aval) for v in eqn.invars)
-        total += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        for v in list(eqn.invars) + list(eqn.outvars):
+            b = _aval_bytes(v.aval)
+            total += b
+            if len(getattr(v.aval, "shape", ())) >= _FEATURE_RANK:
+                feat += b
     name_info = eqn.params.get("name_and_src_info")
     kname = getattr(name_info, "name", None) or str(name_info or "pallas")
-    return kname, total
+    return kname, total, feat
 
 
 def _walk(jaxpr: Jaxpr, mult: int, cost: EntryCost) -> None:
@@ -133,8 +157,9 @@ def _walk(jaxpr: Jaxpr, mult: int, cost: EntryCost) -> None:
             if _is_int(eqn.invars[0].aval) and _is_int(eqn.invars[1].aval):
                 cost.int_macs += m
         elif name == "pallas_call":
-            kname, nbytes = _pallas_call_bytes(eqn)
+            kname, nbytes, fbytes = _pallas_call_bytes(eqn)
             cost.pallas_bytes += nbytes * mult
+            cost.feature_bytes += fbytes * mult
             cost.pallas_traffic[kname] = (
                 cost.pallas_traffic.get(kname, 0) + nbytes * mult)
         sub_mult = mult
@@ -142,6 +167,15 @@ def _walk(jaxpr: Jaxpr, mult: int, cost: EntryCost) -> None:
             sub_mult = mult * int(eqn.params.get("length", 1))
         elif name == "while":
             cost.while_unbounded = True
+        elif name == "pallas_call":
+            # the kernel body's eqns run once PER GRID STEP over block-shaped
+            # avals — without this multiplier a 3-step per-op launch would
+            # report a third of the MACs its group-fused twin reports over
+            # the same math, corrupting the layer-vs-group comparison.
+            steps = 1
+            for g in getattr(eqn.params["grid_mapping"], "grid", ()):
+                steps *= int(g)
+            sub_mult = mult * max(steps, 1)
         for sub in _sub_jaxprs(eqn.params):
             inner = sub.jaxpr if isinstance(sub, ClosedJaxpr) else sub
             _walk(inner, sub_mult, cost)

@@ -250,11 +250,11 @@ def entry_point_specs() -> Dict[str, EntrySpec]:
     s = _audit_setup()
     cfg, params, frame, patches = s.cfg, s.params, s.frame, s.patches
 
-    def fused(pack=None, backend="ref", interpret=None):
+    def fused(pack=None, backend="ref", interpret=None, fusion="layer"):
         def make():
             from repro.core.pipeline import fused_frame_fn
             fn = fused_frame_fn(s.geom, (0, 4, 4), cfg, backend, interpret,
-                                None, pack)
+                                None, pack, fusion)
             return fn, (params, frame, 8.0, 40.0)
         return make
 
@@ -285,6 +285,27 @@ def entry_point_specs() -> Dict[str, EntrySpec]:
                                                     pack=pack)
             else:
                 fn = lambda p, x: essr_forward_qkernels(
+                    p, x, cfg, width=8, pack=pack, interpret=True)
+            return fn, (params, patches)
+        return make
+
+    def perop():
+        def make():
+            from repro.kernels.ops import essr_forward_kernels
+            fn = lambda p, x: essr_forward_kernels(p, x, cfg, width=8,
+                                                   interpret=True)
+            return fn, (params, patches)
+        return make
+
+    def mega(pack=None):
+        def make():
+            from repro.kernels.megakernel import (essr_forward_megakernel,
+                                                  essr_forward_qmegakernel)
+            if pack is None:
+                fn = lambda p, x: essr_forward_megakernel(
+                    p, x, cfg, width=8, interpret=True)
+            else:
+                fn = lambda p, x: essr_forward_qmegakernel(
                     p, x, cfg, width=8, pack=pack, interpret=True)
             return fn, (params, patches)
         return make
@@ -327,6 +348,28 @@ def entry_point_specs() -> Dict[str, EntrySpec]:
         EntrySpec("core.edge_score.edge_score",
                   edge, {0: fr},
                   {"backend": "ref", "quant": "none", "dispatch": "host"}),
+        # the layer-fused per-op stack vs its group-fused megakernel twin:
+        # the cost pass prices both, and the feature_hbm_bytes ratio between
+        # them is the static form of the paper's 79% traffic-reduction claim
+        # (gated end-to-end by bench_gate --audit).
+        EntrySpec("kernels.ops.essr_forward_kernels",
+                  perop(), {1: fr},
+                  {"backend": "pallas", "quant": "none", "dispatch": "host"}),
+        EntrySpec("kernels.megakernel.essr_forward_megakernel",
+                  mega(), {1: fr},
+                  {"backend": "pallas", "quant": "none", "dispatch": "host"}),
+        EntrySpec("kernels.megakernel.essr_forward_qmegakernel[int8]",
+                  mega(s.pack), {1: fr},
+                  {"backend": "pallas", "quant": "int8", "dispatch": "host"}),
+        EntrySpec("kernels.megakernel.essr_forward_qmegakernel[fxp10]",
+                  mega(s.pack_fxp10), {1: fr},
+                  {"backend": "pallas", "quant": "fxp10",
+                   "dispatch": "host"}),
+        EntrySpec("core.pipeline.fused_frame_fn[pallas-int8-group]",
+                  fused(s.pack, "pallas", True, "group"),
+                  {1: fr, 2: th, 3: th},
+                  {"backend": "pallas", "quant": "int8",
+                   "dispatch": "fused"}),
     ]
     return {spec.name: spec for spec in specs}
 

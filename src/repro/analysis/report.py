@@ -239,7 +239,12 @@ def gate_metrics(fresh: Report, baseline: Report,
             fails.append(f"static_costs[{entry}]: entry point no longer "
                          f"analyzed (was in baseline)")
             continue
-        for key in ("macs", "hbm_bytes"):
+        # feature_hbm_bytes: the megakernel's VMEM-residency win — a growth
+        # here means features started crossing HBM between groups again.
+        # Guarded with .get for baselines committed before the key existed.
+        for key in ("macs", "hbm_bytes", "feature_hbm_bytes"):
+            if key not in want or key not in got:
+                continue
             if got[key] > want[key] * (1.0 + traffic_tol):
                 fails.append(
                     f"static_costs[{entry}].{key}: {got[key]:.4g} > "

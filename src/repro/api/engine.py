@@ -54,7 +54,9 @@ from repro.core import subnet_policy as sp
 from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
                                  StreamSwitcherBank, SwitchingConfig)
 from repro.core.edge_score import edge_score
-from repro.core.pipeline import (edge_selective_sr, fused_frame_fn,
+from repro.core.pipeline import (compiled_cache_occupancy,
+                                 configure_compiled_caches,
+                                 edge_selective_sr, fused_frame_fn,
                                  resolve_backend, snap_capacity,
                                  sr_all_patches_result, sr_whole)
 from repro.kernels.dispatch import resolve_interpret
@@ -153,6 +155,16 @@ class SREngine:
         self._fused_caps: Dict[Tuple, Tuple[int, ...]] = {}
         self._warm: set = set()
         self._fused_last_done = 0.0    # marginal-latency clock (async stream)
+        # compiled-object caches (frame executables, admission ticks, patch
+        # geometries) are process-wide BoundedCaches; size them from the
+        # plan's serving horizon — stats_window // 32, floored at 16 and
+        # capped at 512, which lands on the historical 128 at the default
+        # window of 4096. Last-constructed engine wins (the caches are
+        # shared), which is the right bias: the most recent plan reflects
+        # the live serving regime. Occupancy: FrameResult.summary() /
+        # SREngine.summary().
+        configure_compiled_caches(
+            max(16, min(512, self.plan.stats_window // 32)))
 
     def _resolve_quant_pack(self, calibrate, quant_cache):
         """plan.quant -> calibrated `QuantPack` (None for fp32 serving)."""
@@ -214,11 +226,13 @@ class SREngine:
         engine; marks it warm either way (the caller is about to run it).
 
         Best-effort bookkeeping: it mirrors the process-wide executable
-        caches (`fused_frame_fn` / `get_geometry` LRUs, both maxsize 128,
+        caches (`fused_frame_fn` / `get_geometry` BoundedCaches — sized from
+        ``plan.stats_window`` at construction, 128 at the default window —
         and XLA's own jit cache) without sharing their eviction — an engine
         cycling through more combos than those caches hold can see a
-        re-tracing frame reported ``compiled=True``. Sized so that takes
-        >100 concurrent (geometry, capacity-profile) regimes."""
+        re-tracing frame reported ``compiled=True``. Cache occupancy (and
+        the eviction count that diagnoses this) rides
+        `FrameResult.summary()` / `SREngine.summary()`."""
         warm = key in self._warm
         self._warm.add(key)
         return warm
@@ -305,9 +319,9 @@ class SREngine:
         geom = p.geometry(frame.shape[0], frame.shape[1], self.cfg.scale)
         caps = self._fused_caps_for(geom, p, frame, thresholds, streaming)
         fn = fused_frame_fn(geom, caps, self.cfg, self.backend, p.interpret,
-                            self.mesh, self.qpack)
+                            self.mesh, self.qpack, p.fusion)
         compiled = self._mark_warm(("fused", geom.cache_key, caps,
-                                    p.interpret))
+                                    p.interpret, p.fusion))
         t1, t2 = thresholds
         outs = fn(self.params, frame, t1, t2)
         return {"outs": outs, "geom": geom, "caps": caps, "t0": t0,
@@ -580,7 +594,8 @@ class SREngine:
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
                                         interpret=p.interpret, geometry=geom,
-                                        mesh=self.mesh, quant=self.qpack)
+                                        mesh=self.mesh, quant=self.qpack,
+                                        fusion=p.fusion)
         elif ids_override is None and p.subnet_policy != "threshold":
             # forced policies ignore edge scores — reuse the no-scoring path;
             # plan.decide is the single policy-name -> subnet-id mapping.
@@ -592,7 +607,8 @@ class SREngine:
                                         patch=p.patch, overlap=p.overlap,
                                         buckets=p.buckets, backend=self.backend,
                                         interpret=p.interpret, geometry=geom,
-                                        mesh=self.mesh, quant=self.qpack)
+                                        mesh=self.mesh, quant=self.qpack,
+                                        fusion=p.fusion)
         else:
             # an explicit ids_override skips the edge unit entirely, so there
             # are no scores to report for that path
@@ -604,7 +620,8 @@ class SREngine:
                                     ids_override=ids_override,
                                     buckets=p.buckets, backend=self.backend,
                                     interpret=p.interpret, geometry=geom,
-                                    mesh=self.mesh, quant=self.qpack)
+                                    mesh=self.mesh, quant=self.qpack,
+                                    fusion=p.fusion)
         res.image.block_until_ready()
         return FrameResult(image=res.image, mode=result_mode,
                            backend=self._backend_label(p), ids=res.ids,
@@ -671,6 +688,7 @@ class SREngine:
                                 backend=self.backend,
                                 interpret=self.plan.interpret, geometry=geom,
                                 mesh=self.mesh, quant=self.qpack,
+                                fusion=self.plan.fusion,
                                 precomputed=(patches, pos, scores))
         res.image.block_until_ready()
         dt = time.perf_counter() - t0
@@ -780,4 +798,8 @@ class SREngine:
             # the record list is a bounded deque: aggregates cover at most
             # the newest stats_window streamed frames
             s["stats_window"] = self.plan.stats_window
+            # process-wide compiled/geometry cache pressure (satellite of the
+            # bounded-cache work): nonzero evictions under a steady geometry
+            # set means executables are silently re-tracing.
+            s["compiled_caches"] = compiled_cache_occupancy()
         return s

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import subnet_policy as sp
 from repro.core.patching import PatchGeometry, get_geometry
-from repro.core.pipeline import DEFAULT_BUCKETS
+from repro.core.pipeline import DEFAULT_BUCKETS, FUSION_MODES
 from repro.quant.pams import QUANT_MODES as pams_quant_modes
 
 #: Subnet-policy names accepted by :class:`ExecutionPlan`.
@@ -90,6 +90,7 @@ _FIELD_RULES: Dict[str, Tuple[Callable, str]] = {
     "interpret": (lambda v: v in (None, True, False), "None/True/False"),
     "quant": (lambda v: v in QUANT_MODES, f"one of {QUANT_MODES}"),
     "dispatch": (lambda v: v in DISPATCH_MODES, f"one of {DISPATCH_MODES}"),
+    "fusion": (lambda v: v in FUSION_MODES, f"one of {FUSION_MODES}"),
     "capacity": (lambda v: v is None or all(c >= 0 for c in v),
                  "None or a tuple of ints >= 0"),
     "inflight": (_pos_int, "a positive int"),
@@ -156,6 +157,18 @@ class ExecutionPlan:
     #: edge_select calls; forced policies / ids_override / all_patches /
     #: whole always run host dispatch.
     dispatch: str = "host"
+    #: Kernel fusion granularity of the "pallas" backend
+    #: (`core.pipeline.FUSION_MODES`): "layer" (default) runs one Pallas
+    #: kernel per layer group — BSConv, each SFB, DSConv — with the feature
+    #: map round-tripping HBM between groups; "group" runs a subnet's WHOLE
+    #: layer group in ONE megakernel (`kernels.megakernel`) with the feature
+    #: (and, under ``quant``, the integer lattice codes) held in VMEM
+    #: scratch across the chain — the TPU analog of the paper's 79%
+    #: feature-SRAM-access saving. Numerics: fp32 group fusion is allclose
+    #: to layer fusion; quantized group fusion is BIT-EXACT (same shared
+    #: integer math, same site constants). The "ref" backend has no kernels
+    #: to fuse and serves identically under both values.
+    fusion: str = "layer"
     #: Fused-dispatch per-subnet slot capacities, aligned with
     #: ``cfg.subnet_widths()`` (entry 0 — bilinear — is ignored: that lane
     #: runs dense as the spill floor). None = automatic: the engine probes

@@ -75,6 +75,31 @@ class FrameResult:
     def n_patches(self) -> int:
         return 0 if self.ids is None else int(len(self.ids))
 
+    def summary(self) -> dict:
+        """Compact per-frame telemetry dict (no arrays): what ran, how it
+        routed, and the live occupancy of the process-wide compiled caches
+        (`fused_frame_fn` / `fused_stream_frame_fn` / `get_geometry`) — a
+        nonzero eviction count under a steady geometry set means the bound
+        from ``configure_compiled_caches`` is too small and frames are
+        silently re-tracing."""
+        from repro.core.pipeline import compiled_cache_occupancy
+        out = {
+            "mode": self.mode,
+            "backend": self.backend,
+            "dispatch": self.dispatch,
+            "n_patches": self.n_patches,
+            "counts": tuple(int(c) for c in self.counts),
+            "mac_saving": float(self.mac_saving),
+            "latency_s": float(self.latency_s),
+            "compiled": bool(self.compiled),
+            "compiled_caches": compiled_cache_occupancy(),
+        }
+        if self.stream_id is not None:
+            out["stream_id"] = int(self.stream_id)
+        if self.shards > 1:
+            out["shards"] = int(self.shards)
+        return out
+
 
 def summarize_stats(stats) -> dict:
     """Table-XI-style aggregate over frame records (FrameResult or any

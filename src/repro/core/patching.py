@@ -32,6 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.caching import bounded_cache
+
 
 def grid_starts(size: int, patch: int, overlap: int) -> np.ndarray:
     """1-D tiling start offsets with ``overlap`` px shared between neighbours.
@@ -199,11 +201,16 @@ def _axis_idx(starts: np.ndarray, patch: int, scale: int) -> np.ndarray:
             + np.arange(patch * scale)).reshape(-1)
 
 
-@functools.lru_cache(maxsize=128)
+@bounded_cache(maxsize=128)
 def get_geometry(h: int, w: int, patch: int = 32, overlap: int = 2,
                  scale: int = 4) -> PatchGeometry:
     """The cached geometry for one frame shape — the hot path's only host
-    work, paid once per (H, W, patch, overlap, scale)."""
+    work, paid once per (H, W, patch, overlap, scale).
+
+    A `core.caching.BoundedCache` (lru semantics, runtime-resizable):
+    `SREngine` sizes it together with the compiled-executable caches via
+    `core.pipeline.configure_compiled_caches`, and its occupancy rides
+    `FrameResult.summary()`."""
     pos, gather_idx, (hp, wp), (n_y, n_x) = _extract_maps(h, w, patch, overlap)
     ys, xs = np.unique(pos[:, 0]), np.unique(pos[:, 1])
     y_idx, x_idx, y_cnt, x_cnt = _cartesian_maps(

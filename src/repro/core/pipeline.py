@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import subnet_policy as sp
+from repro.core.caching import bounded_cache
 from repro.core.edge_score import edge_score
 from repro.core.patching import (PatchGeometry, extract_patches_loop,
                                  fuse_patches_average_loop, get_geometry)
@@ -79,7 +80,31 @@ def _forward_width_pallas(params, patches, cfg: ESSRConfig, width: int,
                                 interpret=interpret)
 
 
+def _forward_width_mega(params, patches, cfg: ESSRConfig, width: int,
+                        interpret: Optional[bool] = None):
+    """Group-fused Pallas backend (``ExecutionPlan.fusion="group"``): the
+    whole subnet layer group in ONE pallas_call, features VMEM-resident
+    between groups (`kernels.megakernel`). Same contract as
+    ``_forward_width_pallas``; width 0 is the same bilinear bypass."""
+    from repro.kernels.megakernel import essr_forward_megakernel
+    from repro.models.layers import bilinear_resize
+    if width == 0:
+        return bilinear_resize(patches, cfg.scale)
+    return essr_forward_megakernel(params, patches, cfg, width=width,
+                                   interpret=interpret)
+
+
 BACKENDS = {"ref": _forward_width, "pallas": _forward_width_pallas}
+
+#: Kernel fusion granularity of the "pallas" backend (`ExecutionPlan.fusion`):
+#: "layer" — one pallas_call per layer group (BSConv / SFB / DSConv), the
+#:           feature map round-trips HBM between groups;
+#: "group" — ONE pallas_call per subnet running the full group chain with the
+#:           feature (and, under quant, the integer codes) in VMEM scratch —
+#:           the TPU analog of the paper's 79% feature-SRAM-access saving.
+#: The "ref" backend has no kernels to fuse; it accepts both values and runs
+#: identically (so plans stay backend-portable).
+FUSION_MODES = ("layer", "group")
 
 
 def resolve_backend(name: str):
@@ -124,14 +149,39 @@ def _forward_width_quant_pallas(params, patches, cfg: ESSRConfig, width: int,
                                  pack=quant, interpret=interpret)
 
 
+def _forward_width_quant_mega(params, patches, cfg: ESSRConfig, width: int,
+                              interpret: Optional[bool] = None, *, quant):
+    """Group-fused integer megakernel (quant x fusion="group"): bit-exact vs
+    the per-op quant stack, with the inter-group lattice codes VMEM-resident
+    (they never touch HBM between layer groups)."""
+    from repro.kernels.megakernel import essr_forward_qmegakernel
+    if width == 0:
+        from repro.models.layers import bilinear_resize
+        return bilinear_resize(patches, cfg.scale)
+    return essr_forward_qmegakernel(params, patches, cfg, width=width,
+                                    pack=quant, interpret=interpret)
+
+
 QUANT_BACKENDS = {"ref": _forward_width_quant_ref,
                   "pallas": _forward_width_quant_pallas}
 
 
-def resolve_forward(backend: str, quant=None):
-    """(backend, QuantPack-or-None) -> the per-subnet forward callable with
-    the uniform ``(params, patches, cfg, width, interpret=)`` signature."""
+def resolve_forward(backend: str, quant=None, fusion: str = "layer"):
+    """(backend, QuantPack-or-None, fusion) -> the per-subnet forward
+    callable with the uniform ``(params, patches, cfg, width, interpret=)``
+    signature.
+
+    ``fusion`` (see `FUSION_MODES`) selects the "pallas" backend's kernel
+    granularity; the "ref" backend is already one jit graph per subnet, so
+    both values resolve to the same forward there."""
     resolve_backend(backend)            # single source of name validation
+    if fusion not in FUSION_MODES:
+        raise ValueError(f"unknown fusion {fusion!r}; choose from "
+                         f"{FUSION_MODES}")
+    if backend == "pallas" and fusion == "group":
+        if quant is None:
+            return _forward_width_mega
+        return functools.partial(_forward_width_quant_mega, quant=quant)
     if quant is None:
         return BACKENDS[backend]
     return functools.partial(QUANT_BACKENDS[backend], quant=quant)
@@ -143,18 +193,19 @@ def resolve_forward(backend: str, quant=None):
 
 @functools.lru_cache(maxsize=64)
 def _sharded_forward_fn(backend: str, mesh, cfg: ESSRConfig, width: int,
-                        interpret: Optional[bool], quant=None):
+                        interpret: Optional[bool], quant=None,
+                        fusion: str = "layer"):
     """jit(shard_map(forward)) splitting the patch batch over ``mesh``'s single
     axis, params replicated. Cached per (backend, mesh, cfg, width, interpret,
-    quant) so the shard_map callable (and its compiled executable) is built
-    once per routing regime (`QuantPack` is frozen/hashable for exactly this).
-    ``check_rep=False``: pallas_call has no replication rule, and the batch
-    axis carries no collectives anyway."""
+    quant, fusion) so the shard_map callable (and its compiled executable) is
+    built once per routing regime (`QuantPack` is frozen/hashable for exactly
+    this). ``check_rep=False``: pallas_call has no replication rule, and the
+    batch axis carries no collectives anyway."""
     from repro.distributed.sharding import patch_batch_spec
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    forward = resolve_forward(backend, quant)
+    forward = resolve_forward(backend, quant, fusion)
     spec = patch_batch_spec(mesh)
 
     def local(params, patches):
@@ -167,7 +218,7 @@ def _sharded_forward_fn(backend: str, mesh, cfg: ESSRConfig, width: int,
 def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
                     *, mesh, backend: str = "ref",
                     interpret: Optional[bool] = None,
-                    quant=None) -> jax.Array:
+                    quant=None, fusion: str = "layer") -> jax.Array:
     """Run one subnet's patch batch data-parallel across ``mesh`` devices.
 
     Pads the batch up to a multiple of the mesh size by repeating the last
@@ -179,8 +230,8 @@ def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
     if pad:
         patches = jnp.concatenate(
             [patches, jnp.repeat(patches[-1:], pad, axis=0)], axis=0)
-    out = _sharded_forward_fn(backend, mesh, cfg, width, interpret, quant)(
-        params, patches)
+    out = _sharded_forward_fn(backend, mesh, cfg, width, interpret, quant,
+                              fusion)(params, patches)
     return out[:n] if pad else out
 
 
@@ -268,15 +319,19 @@ def capacity_combine(out_patches: jax.Array, sr_slots: jax.Array,
                      out_patches)
 
 
-@functools.lru_cache(maxsize=128)      # sized with get_geometry's LRU: an
+@bounded_cache(maxsize=128)            # sized with get_geometry's cache: an
                                        # evicted executable would silently
                                        # re-trace under SREngine's warm-key
-                                       # bookkeeping
+                                       # bookkeeping. BoundedCache: the
+                                       # engine resizes all three together
+                                       # (configure_compiled_caches).
 def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
                    cfg: ESSRConfig, backend: str,
-                   interpret: Optional[bool], mesh, quant):
+                   interpret: Optional[bool], mesh, quant,
+                   fusion: str = "layer"):
     """The compiled frame executable: one per (geometry, capacity profile,
-    backend, interpret, mesh, quant). Signature of the returned callable:
+    backend, interpret, mesh, quant, fusion). Signature of the returned
+    callable:
 
         (params, frame, t1, t2) -> (image, eff_ids, scores, counts, spills)
 
@@ -286,12 +341,12 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
     frame behind)."""
     from repro.models.layers import bilinear_resize
 
-    base_forward = resolve_forward(backend, quant)
+    base_forward = resolve_forward(backend, quant, fusion)
     if mesh is not None and int(mesh.size) > 1:
         def forward(params, patches, cfg, width, interpret=None):
             return sharded_forward(params, patches, cfg, width, mesh=mesh,
                                    backend=backend, interpret=interpret,
-                                   quant=quant)
+                                   quant=quant, fusion=fusion)
     else:
         forward = base_forward
     widths = cfg.subnet_widths()
@@ -320,11 +375,11 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
     return jax.jit(run)
 
 
-@functools.lru_cache(maxsize=128)
+@bounded_cache(maxsize=128)
 def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
                           caps: Tuple[int, ...], cfg: ESSRConfig,
                           backend: str, interpret: Optional[bool],
-                          mesh, quant):
+                          mesh, quant, fusion: str = "layer"):
     """The compiled multi-tenant admission-tick executable: ``streams``
     same-geometry frames (one per live tenant stream) through ONE
     capacity-slotted dispatch. Signature of the returned callable:
@@ -352,12 +407,12 @@ def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
     budget-clamped capacity."""
     from repro.models.layers import bilinear_resize
 
-    base_forward = resolve_forward(backend, quant)
+    base_forward = resolve_forward(backend, quant, fusion)
     if mesh is not None and int(mesh.size) > 1:
         def forward(params, patches, cfg, width, interpret=None):
             return sharded_forward(params, patches, cfg, width, mesh=mesh,
                                    backend=backend, interpret=interpret,
-                                   quant=quant)
+                                   quant=quant, fusion=fusion)
     else:
         forward = base_forward
     widths = cfg.subnet_widths()
@@ -437,13 +492,48 @@ def fused_frame_forward(params, frame, cfg: ESSRConfig, *,
                         t1: float = sp.DEFAULT_T1, t2: float = sp.DEFAULT_T2,
                         backend: str = "ref",
                         interpret: Optional[bool] = None,
-                        mesh=None, quant=None):
+                        mesh=None, quant=None, fusion: str = "layer"):
     """One frame through the fused single-dispatch graph (see
     :func:`fused_frame_fn`). Returns the raw device-array five-tuple; the
     engine wraps it into a `FrameResult` and owns capacity-profile policy."""
     return fused_frame_fn(geometry, tuple(int(c) for c in caps), cfg,
-                          backend, interpret, mesh, quant)(
+                          backend, interpret, mesh, quant, fusion)(
         params, frame, t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# bounded compiled-object caches (runtime-sized, occupancy-observable)
+# ---------------------------------------------------------------------------
+
+#: The process-wide `BoundedCache`s holding compiled/prepared per-frame
+#: objects. Keyed by what each cache memoizes; the geometry cache lives in
+#: core.patching but is sized and surfaced together with the executables
+#: (an evicted geometry would re-key — and silently re-trace — the frame
+#: executables built on its identity).
+COMPILED_CACHES = {
+    "fused_frame_fn": fused_frame_fn,
+    "fused_stream_frame_fn": fused_stream_frame_fn,
+    "get_geometry": get_geometry,
+}
+
+
+def configure_compiled_caches(maxsize: int) -> None:
+    """Resize every compiled-object cache to ``maxsize`` entries (lru
+    eviction; shrinking evicts immediately). `SREngine` derives the bound
+    from ``plan.stats_window`` at construction so cache depth follows the
+    serving horizon; call directly to pin it."""
+    for cache in COMPILED_CACHES.values():
+        cache.resize(maxsize)
+
+
+def compiled_cache_occupancy() -> Dict[str, Dict[str, int]]:
+    """{cache: {size, maxsize, hits, misses, evictions}} over the
+    compiled-object caches — the snapshot `FrameResult.summary()` and
+    `SREngine.summary()` surface. Nonzero evictions under a steady set of
+    geometries/plans means the bound is too small and executables are being
+    silently re-traced."""
+    return {name: cache.occupancy()
+            for name, cache in COMPILED_CACHES.items()}
 
 
 @dataclasses.dataclass
@@ -468,6 +558,7 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
                                                   np.ndarray]] = None,
                       mesh=None,
                       quant=None,
+                      fusion: str = "layer",
                       use_loop_reference: bool = False) -> SRResult:
     """frame: (H,W,3) in [0,1] -> SRResult with (H*s, W*s, 3) image.
 
@@ -494,12 +585,12 @@ def edge_selective_sr(params: Dict[str, Any], frame: jax.Array, cfg: ESSRConfig,
     the "before" side of benchmarks/table11_throughput.py. Never the serving
     path.
     """
-    forward = resolve_forward(backend, quant)
+    forward = resolve_forward(backend, quant, fusion)
     if mesh is not None and int(mesh.size) > 1:
         def forward(params, patches, cfg, width, interpret=None):
             return sharded_forward(params, patches, cfg, width, mesh=mesh,
                                    backend=backend, interpret=interpret,
-                                   quant=quant)
+                                   quant=quant, fusion=fusion)
     s = cfg.scale
     h, w = int(frame.shape[0]), int(frame.shape[1])
     g = geometry if geometry is not None else get_geometry(h, w, patch,
@@ -561,7 +652,8 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
                           backend: str = "ref",
                           interpret: Optional[bool] = None,
                           geometry: Optional[PatchGeometry] = None,
-                          mesh=None, quant=None) -> SRResult:
+                          mesh=None, quant=None,
+                          fusion: str = "layer") -> SRResult:
     """Every patch through one subnet (the non-edge-selective reference).
 
     The single implementation of forced routing — the edge-score pass is
@@ -576,7 +668,7 @@ def sr_all_patches_result(params, frame, cfg: ESSRConfig, width: int,
     return edge_selective_sr(params, frame, cfg, patch=patch, overlap=overlap,
                              ids_override=ids, buckets=buckets, backend=backend,
                              interpret=interpret, geometry=g, mesh=mesh,
-                             quant=quant,
+                             quant=quant, fusion=fusion,
                              precomputed=(patches, pos,
                                           np.zeros(len(pos), np.float32)))
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.dispatch import pad_batch, resolve_interpret
+from repro.kernels.dispatch import pad_batch, resolve_block, resolve_interpret
 
 
 def _dw3x3(y: jax.Array, dw: jax.Array) -> jax.Array:
@@ -64,10 +64,12 @@ def bsconv_fused(x, pw, pw_b, dw, dw_b, *, relu: bool = False,
     Batches not divisible by the block are zero-padded and re-sliced.
     """
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, x.shape[0])
+    cout = pw.shape[-1]
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        return jnp.zeros((0,) + x.shape[1:3] + (cout,), x.dtype)
+    bblk = resolve_block(x.shape[0], block_patches)
     x, n = pad_batch(x, bblk)
     _, h, w, cin = x.shape
-    cout = pw.shape[-1]
     pwb2 = pw_b.reshape(1, cout)
     dwb2 = dw_b.reshape(1, cout)
     grid = (x.shape[0] // bblk,)

@@ -33,6 +33,27 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def resolve_block(n: int, block_patches: int) -> int:
+    """Batch length + requested block -> the grid block actually launched.
+
+    ``min(block_patches, n)`` alone has two failure modes this fixes:
+
+      * ``n == 0`` (an emptied routing bucket) yields block 0, and
+        ``pad_batch`` divides by zero — empty batches return 0 here and
+        every fused wrapper early-returns an empty output before padding;
+      * a remainder batch pads up to a full extra block (``n=9, block=8``
+        padded 9 -> 16): the padded rows burn MACs and inflate the static
+        cost model. Keeping the same grid step count but shrinking the
+        block to ``ceil(n / steps)`` gives the minimal zero-pad
+        (9 -> 2 steps of 5, one pad row instead of seven).
+    """
+    if n <= 0:
+        return 0
+    blk = min(block_patches, n)
+    steps = -(-n // blk)
+    return -(-n // steps)
+
+
 def pad_batch(x: jax.Array, block: int):
     """Pad axis 0 of ``x`` up to a multiple of ``block`` (zeros).
 
@@ -41,6 +62,10 @@ def pad_batch(x: jax.Array, block: int):
     ``assert n % block == 0`` (a trap for direct callers) and the silent
     ``block -= 1`` walk-down that destroyed throughput for prime batch sizes.
     """
+    if block < 1:
+        raise ValueError(
+            f"pad_batch block must be >= 1, got {block}: empty batches must "
+            f"early-return before padding (see resolve_block)")
     n = x.shape[0]
     pad = (-n) % block
     if pad:

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bsconv import _dw3x3
-from repro.kernels.dispatch import pad_batch, resolve_interpret
+from repro.kernels.dispatch import pad_batch, resolve_block, resolve_interpret
 
 
 def dsconv_kernel(x_ref, dw_ref, dwb_ref, pw_ref, pwb_ref, o_ref, *, relu: bool):
@@ -38,10 +38,12 @@ def dsconv_fused(x, dw, dw_b, pw, pw_b, *, relu: bool = False,
     ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU);
     non-divisible batches are zero-padded and re-sliced."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, x.shape[0])
+    cout = pw.shape[-1]
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        return jnp.zeros((0,) + x.shape[1:3] + (cout,), x.dtype)
+    bblk = resolve_block(x.shape[0], block_patches)
     x, n = pad_batch(x, bblk)
     _, h, w, cin = x.shape
-    cout = pw.shape[-1]
     return pl.pallas_call(
         functools.partial(dsconv_kernel, relu=relu),
         grid=(x.shape[0] // bblk,),

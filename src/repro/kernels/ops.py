@@ -21,12 +21,18 @@ from typing import Any, Dict, Optional
 import jax
 
 from repro.kernels.bsconv import bsconv_fused
-from repro.kernels.dispatch import default_interpret, pad_batch, resolve_interpret
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import (default_interpret, pad_batch,
+                                    resolve_block, resolve_interpret)
 from repro.kernels.dsconv import dsconv_fused
 from repro.kernels.edge import edge_score_fused
 from repro.kernels.qconv import (essr_forward_qkernels, essr_forward_qref,
                                  qbsconv_fused, qdsconv_fused, qsfb_fused,
                                  quantize_fused)
+from repro.kernels.megakernel import (autotune_block_patches,
+                                      essr_forward_megakernel,
+                                      essr_forward_qmegakernel)
 from repro.kernels.sfb import sfb_fused
 from repro.models.essr import ESSRConfig, slice_width
 from repro.models.layers import pixel_shuffle
@@ -62,10 +68,14 @@ def essr_forward_kernels(params, x, cfg: ESSRConfig, width: Optional[int] = None
     ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU)."""
     w = width if width is not None else cfg.channels
     assert w > 0, "bilinear subnet does not use the conv kernels"
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        s = cfg.scale
+        return jnp.zeros((0, x.shape[1] * s, x.shape[2] * s, cfg.in_channels),
+                         x.dtype)
     if w != cfg.channels:
         params = slice_width(params, w)
     bp = block_patches if block_patches is not None else default_block_patches(w, cfg.channels)
-    bp = min(bp, x.shape[0])
+    bp = resolve_block(x.shape[0], bp)
     x, n = pad_batch(x, bp)
 
     f = bsconv_fused(x, params["first"]["pw"][0, 0], params["first"]["pw_b"],
@@ -83,4 +93,6 @@ __all__ = ["bsconv_fused", "dsconv_fused", "sfb_fused", "edge_score_fused",
            "essr_forward_kernels", "default_block_patches",
            "default_interpret", "resolve_interpret",
            "quantize_fused", "qbsconv_fused", "qsfb_fused", "qdsconv_fused",
-           "essr_forward_qkernels", "essr_forward_qref"]
+           "essr_forward_qkernels", "essr_forward_qref",
+           "essr_forward_megakernel", "essr_forward_qmegakernel",
+           "autotune_block_patches"]

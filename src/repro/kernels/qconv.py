@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bsconv import _dw3x3
-from repro.kernels.dispatch import pad_batch, resolve_interpret
+from repro.kernels.dispatch import pad_batch, resolve_block, resolve_interpret
 from repro.models.essr import ESSRConfig, slice_width
 from repro.models.layers import pixel_shuffle
 from repro.quant.pams import (EPS, QuantPack, code_dtype, step_size,
@@ -148,7 +148,9 @@ def quantize_fused(x, *, a: float, s: float, bits: int,
                    block_patches: int = 4, interpret: Optional[bool] = None):
     """fp tensor -> integer lattice codes (`int_codes` bit-exact)."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, x.shape[0])
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        return jnp.zeros(x.shape, code_dtype(bits))
+    bblk = resolve_block(x.shape[0], block_patches)
     x, n = pad_batch(x, bblk)
     shp = x.shape[1:]
     return pl.pallas_call(
@@ -176,10 +178,12 @@ def qbsconv_fused(xq, pwq, pw_scale, pw_b, dw_fq, dw_b, *, relu: bool,
     """xq: (N,H,W,Cin) codes; pwq: (Cin,Cout) codes; pw_scale: (Cout,) folded
     input*weight step; dw_fq: (3,3,Cout) fake-quant fp. Returns codes."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, xq.shape[0])
+    cout = pwq.shape[-1]
+    if xq.shape[0] == 0:     # emptied routing bucket: no grid to launch
+        return jnp.zeros((0,) + xq.shape[1:3] + (cout,), xq.dtype)
+    bblk = resolve_block(xq.shape[0], block_patches)
     xq, n = pad_batch(xq, bblk)
     _, h, w, cin = xq.shape
-    cout = pwq.shape[-1]
     return pl.pallas_call(
         functools.partial(_qbsconv_kernel, relu=relu, a_out=a_out,
                           s_out=s_out),
@@ -225,7 +229,9 @@ def qsfb_fused(xq, q: Dict[str, jax.Array], *, consts: Tuple[float, ...],
     ``q``: array operands from `prepare_qparams`; ``consts``: the six scalar
     quant constants (a_b1, s_b1, a_b2, s_b2, a_out, s_out)."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, xq.shape[0])
+    if xq.shape[0] == 0:     # emptied routing bucket: no grid to launch
+        return jnp.zeros(xq.shape, xq.dtype)
+    bblk = resolve_block(xq.shape[0], block_patches)
     xq, n = pad_batch(xq, bblk)
     _, h, w, c = xq.shape
     r2 = lambda v: v.reshape(1, c)
@@ -267,10 +273,12 @@ def qdsconv_fused(xq, dwq, dw_scale, dw_b, pw_fq, pw_b, *, a_out: float,
     """xq: (N,H,W,Cin) codes; dwq: (3,3,Cin) int32 codes; pw_fq: (Cin,Cout)
     fake-quant fp. Returns (N,H,W,Cout) codes at the recon site."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, xq.shape[0])
+    cout = pw_fq.shape[-1]
+    if xq.shape[0] == 0:     # emptied routing bucket: no grid to launch
+        return jnp.zeros((0,) + xq.shape[1:3] + (cout,), xq.dtype)
+    bblk = resolve_block(xq.shape[0], block_patches)
     xq, n = pad_batch(xq, bblk)
     _, h, w, cin = xq.shape
-    cout = pw_fq.shape[-1]
     return pl.pallas_call(
         functools.partial(_qdsconv_kernel, a_out=a_out, s_out=s_out),
         grid=(xq.shape[0] // bblk,),
@@ -397,22 +405,35 @@ def essr_forward_qkernels(params, x, cfg: ESSRConfig,
     from repro.kernels.ops import default_block_patches
     w = width if width is not None else cfg.channels
     assert w > 0, "bilinear subnet does not use the conv kernels"
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        s = cfg.scale
+        return jnp.zeros((0, x.shape[1] * s, x.shape[2] * s, cfg.in_channels),
+                         x.dtype)
     q, c = prepare_qparams(params, cfg, w, pack)
     bp = block_patches if block_patches is not None else \
         default_block_patches(w, cfg.channels)
-    bp = min(bp, x.shape[0])
+    bp = resolve_block(x.shape[0], bp)
     x, n = pad_batch(x, bp)
+    # Zero-pad rows re-quantize to NONZERO codes (the dequant folds biases
+    # back in before the requantize clip), so without masking they flow as
+    # garbage through every later group's int32 accumulate. Force pad rows
+    # back to exact-zero codes after each group — integer multiply by
+    # {0,1}, exact, and a no-op for the valid rows sliced out at the end.
+    valid = (jnp.arange(x.shape[0]) < n)[:, None, None, None]
 
-    f = quantize_fused(x, a=c["a_in"], s=c["s_in"], bits=pack.bits,
-                       block_patches=bp, interpret=interpret)
-    f = qbsconv_fused(f, q["first"]["pwq"], q["first"]["pw_scale"],
-                      q["first"]["pwb"], q["first"]["dw_fq"],
-                      q["first"]["dwb"], relu=False, a_out=c["a_first"],
-                      s_out=c["s_first"], block_patches=bp,
-                      interpret=interpret)
+    def mask(codes):
+        return codes * valid.astype(codes.dtype)
+
+    f = mask(quantize_fused(x, a=c["a_in"], s=c["s_in"], bits=pack.bits,
+                            block_patches=bp, interpret=interpret))
+    f = mask(qbsconv_fused(f, q["first"]["pwq"], q["first"]["pw_scale"],
+                           q["first"]["pwb"], q["first"]["dw_fq"],
+                           q["first"]["dwb"], relu=False, a_out=c["a_first"],
+                           s_out=c["s_first"], block_patches=bp,
+                           interpret=interpret))
     for i, sfb in enumerate(q["sfbs"]):
-        f = qsfb_fused(f, sfb, consts=_sfb_consts(c, i),
-                       block_patches=bp, interpret=interpret)
+        f = mask(qsfb_fused(f, sfb, consts=_sfb_consts(c, i),
+                            block_patches=bp, interpret=interpret))
     r = qdsconv_fused(f, q["recon"]["dwq"], q["recon"]["dw_scale"],
                       q["recon"]["dwb"], q["recon"]["pw_fq"],
                       q["recon"]["pwb"], a_out=c["a_recon"],

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bsconv import _dw3x3
-from repro.kernels.dispatch import pad_batch, resolve_interpret
+from repro.kernels.dispatch import pad_batch, resolve_block, resolve_interpret
 
 
 def sfb_kernel(x_ref, b1pw_ref, b1pwb_ref, b1dw_ref, b1dwb_ref,
@@ -45,7 +45,9 @@ def sfb_fused(x, p, *, block_patches: int = 4, interpret: Optional[bool] = None)
     ``interpret``: None = auto (compiled on TPU/GPU, interpreter on CPU);
     non-divisible batches are zero-padded and re-sliced."""
     interpret = resolve_interpret(interpret)
-    bblk = min(block_patches, x.shape[0])
+    if x.shape[0] == 0:      # emptied routing bucket: no grid to launch
+        return jnp.zeros(x.shape, x.dtype)
+    bblk = resolve_block(x.shape[0], block_patches)
     x, n = pad_batch(x, bblk)
     _, h, w, c = x.shape
     r2 = lambda v: v.reshape(1, -1)

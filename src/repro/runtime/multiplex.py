@@ -116,9 +116,9 @@ class StreamMultiplexer:
         caps = self._caps_for_tick(geom, p, batch, thresholds, quotas)
         fn = fused_stream_frame_fn(geom, len(live), caps, eng.cfg,
                                    eng.backend, p.interpret, eng.mesh,
-                                   eng.qpack)
+                                   eng.qpack, p.fusion)
         compiled = eng._mark_warm(("mux", geom.cache_key, len(live), caps,
-                                   p.interpret))
+                                   p.interpret, p.fusion))
         t1s = jnp.asarray([t[0] for t in thresholds], jnp.float32)
         t2s = jnp.asarray([t[1] for t in thresholds], jnp.float32)
         outs = fn(eng.params, batch, t1s, t2s,
