@@ -53,6 +53,7 @@ from repro.core.adaptive import SwitchingConfig
 from repro.core.pipeline import edge_selective_sr
 from repro.launch.mesh import make_patch_mesh
 from repro.models.essr import ESSRConfig, init_essr
+from repro.runtime.guard import FaultPlan
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
                           "BENCH_table11_throughput.json")
@@ -336,6 +337,85 @@ def _measure_streams(params, cfg, frame, n_streams: int = 4,
     }
 
 
+def _measure_resilience(params, cfg, frame, reps: int = 5) -> dict:
+    """Cost and conformance of the serving guard (``plan.on_poison`` /
+    `repro.runtime.guard`):
+
+      * ``guarded_vs_unguarded_x`` — fused-dispatch fps with in-graph
+        health verdicts + sanitize vs verdicts off, INTERLEAVED best-of
+        like the dispatch sweep so load drift cancels. The CI gate floors
+        this at 0.95x: the verdict is three fused reductions and must stay
+        under a 5% tax.
+      * ``clean_bit_equal`` — on a clean frame the sanitize path must be a
+        bit-level no-op (zero tolerance: a guarded server that perturbs
+        healthy output is wrong, not slow).
+      * ``chaos`` — a seeded `FaultPlan` storm through ``serve_streams``
+        (poison + injected backend failures + quarantine): the run must
+        finish without an escaped exception and two identical runs must
+        produce identical degradation ledgers (zero tolerance on both)."""
+    off = SREngine(params, cfg, switching=_stable_switching(),
+                   plan=ExecutionPlan(dispatch="fused", on_poison="off"))
+    on = SREngine(params, cfg, switching=_stable_switching(),
+                  plan=ExecutionPlan(dispatch="fused",
+                                     on_poison="sanitize"))
+    img_off = np.asarray(jax.block_until_ready(off.upscale(frame).image))
+    img_on = np.asarray(jax.block_until_ready(on.upscale(frame).image))
+    clean_bit_equal = bool(np.array_equal(img_off, img_on))
+    us_off = us_on = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(off.upscale(frame).image)
+        us_off = min(us_off, (time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+        jax.block_until_ready(on.upscale(frame).image)
+        us_on = min(us_on, (time.perf_counter() - t0) * 1e6)
+    ratio = us_off / us_on                       # guarded fps / unguarded fps
+
+    def chaos_run():
+        fp = FaultPlan(seed=7, poison_rate=0.5, poison_kinds=("nan", "inf"),
+                       backend_failure_rate=0.2, target_streams=(1,))
+        h, w = int(frame.shape[0]), int(frame.shape[1])
+        geom = ExecutionPlan().geometry(h, w, cfg.scale)
+        eng = SREngine(params, cfg, switching=_stable_switching(),
+                       plan=ExecutionPlan(dispatch="fused", streams=3,
+                                          capacity=(0, geom.n, geom.n),
+                                          on_poison="raise",
+                                          quarantine_ticks=1, faults=fp))
+        streams = [[jnp.roll(frame, 13 * (s + 1) * (t + 1), axis=1)
+                    for t in range(3)] for s in range(3)]
+        outs = list(eng.serve_streams(streams))
+        trace = [(o.stream_id, o.health, o.degraded) for o in outs]
+        return trace, eng.summary().get("degradations", {}).get("by_kind",
+                                                                {})
+
+    crash_free = True
+    deterministic = False
+    by_kind = {}
+    try:
+        t1, k1 = chaos_run()
+        t2, k2 = chaos_run()
+        deterministic = (t1 == t2 and k1 == k2)
+        by_kind = k1
+    except Exception as e:
+        crash_free = False
+        by_kind = {"escaped": repr(e)}
+    emit("table11_resilience_guarded", us_on,
+         f"fps={1e6 / us_on:.3f};guarded_vs_unguarded_x={ratio:.3f};"
+         f"clean_bit_equal={clean_bit_equal};crash_free={crash_free};"
+         f"deterministic={deterministic}")
+    return {
+        "unguarded": {"us_per_frame": round(us_off, 1),
+                      "fps": round(1e6 / us_off, 3)},
+        "guarded_sanitize": {"us_per_frame": round(us_on, 1),
+                             "fps": round(1e6 / us_on, 3)},
+        "guarded_vs_unguarded_x": round(ratio, 3),
+        "clean_bit_equal": clean_bit_equal,
+        "chaos": {"crash_free": crash_free,
+                  "deterministic": deterministic,
+                  "by_kind": by_kind},
+    }
+
+
 def _measure_fusion(params, cfg, frame) -> dict:
     """Layer fusion (per-op kernel stack: BSConv -> 5xSFB -> DSConv, features
     crossing HBM at every group boundary) vs group fusion (the
@@ -531,6 +611,9 @@ def bench_patch_pipeline(out_json: str = BENCH_JSON,
         # (it straddles the smooth/noise boundary) with a working set
         # small enough that repeated measurements agree.
         "multi_stream": _measure_streams(params, cfg, mixed[:192, :192]),
+        # serving-guard tax (in-graph health verdicts) + chaos conformance
+        # on the same cropped mixed frame as the multi-stream rows
+        "resilience": _measure_resilience(params, cfg, mixed[:192, :192]),
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)

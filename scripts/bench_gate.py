@@ -41,6 +41,14 @@ and fails when the fresh numbers regress past a tolerance band:
     ratio travels across machines; aggregate fps is additionally banded
     against the committed value like every fps row.
 
+  * the resilience row gates the serving guard: guarded (in-graph health
+    verdicts + sanitize) fps must hold at least 0.95x of unguarded fps
+    (fixed floor — interleaved same-run ratio, so 5% travels across
+    machines), the sanitize path must be bit-equal to verdicts-off on
+    clean frames, and the seeded chaos run must finish crash-free with a
+    degradation ledger identical across two identically-seeded runs —
+    all three at zero tolerance.
+
 The fresh JSON is written to ``--out`` for upload as a workflow artifact, so
 every CI run leaves an inspectable perf record even when the gate passes.
 
@@ -236,6 +244,36 @@ def compare(committed: dict, fresh: dict, tol: float,
             band("multi_stream.mux_aggregate.fps",
                  got_m.get("mux_aggregate", {}).get("fps", 0.0),
                  want_m.get("mux_aggregate", {}).get("fps", 0.0))
+
+    # -- resilience: guard tax band + zero-tolerance chaos conformance ----
+    want_r = committed.get("resilience", {})
+    got_r = fresh.get("resilience", {})
+    if want_r:
+        if not got_r:
+            fails.append("resilience: missing from fresh run")
+        else:
+            ratio = got_r.get("guarded_vs_unguarded_x", 0.0)
+            # fixed floor, not the machine band: the guard's verdict is
+            # three in-graph reductions, and both sides of the ratio are
+            # interleaved in the same run, so 5% travels across hosts
+            if ratio < 0.95:
+                fails.append(
+                    f"resilience: guarded serving is {ratio:.3f}x of "
+                    f"unguarded (floor 0.95x — the health verdict must "
+                    f"stay under a 5% tax)")
+            if not got_r.get("clean_bit_equal", False):
+                fails.append("resilience: sanitize path perturbs CLEAN "
+                             "frames (must be a bit-level no-op, zero "
+                             "tolerance)")
+            chaos = got_r.get("chaos", {})
+            if not chaos.get("crash_free", False):
+                fails.append(f"resilience: chaos run crashed the engine "
+                             f"({chaos.get('by_kind')}) — no fault class "
+                             f"may escape serve_streams (zero tolerance)")
+            if not chaos.get("deterministic", False):
+                fails.append("resilience: two identically-seeded chaos "
+                             "runs diverged (degradations must be "
+                             "deterministic, zero tolerance)")
 
     want_q = committed.get("quant_sweep", {})
     got_q = fresh.get("quant_sweep", {})

@@ -155,4 +155,43 @@ else:
           "counts:", res.shard_counts)
 PY
 
+echo "== chaos smoke (seeded faults: determinism + tenant isolation) =="
+python - <<'PY'
+import numpy as np
+from repro.api import ExecutionPlan, SREngine
+from repro.core.adaptive import SwitchingConfig
+from repro.models.essr import ESSRConfig, init_essr
+from repro.runtime.guard import FaultPlan
+import jax
+
+CFG = ESSRConfig(scale=2)
+params = init_essr(jax.random.PRNGKey(0), CFG)
+sw = SwitchingConfig(frame_high=10**9, frame_low=0)
+fp = FaultPlan(seed=7, poison_rate=0.5, poison_kinds=("nan", "inf"),
+               backend_failure_rate=0.2, target_streams=(1,))
+
+def frames(seed, n=4):
+    rng = np.random.default_rng(seed)
+    return [rng.random((64, 64, 3), np.float32) for _ in range(n)]
+
+def chaos_run():
+    plan = ExecutionPlan(dispatch="fused", streams=3, capacity=(0, 9, 9),
+                         on_poison="raise", quarantine_ticks=1, faults=fp)
+    eng = SREngine(params, CFG, plan=plan, switching=sw)
+    outs = list(eng.serve_streams([frames(100 + s) for s in range(3)]))
+    trace = [(o.stream_id, o.health, o.degraded) for o in outs]
+    return trace, eng.summary()["degradations"]["by_kind"]
+
+t1, k1 = chaos_run()
+t2, k2 = chaos_run()
+assert t1 == t2, "chaos run is not deterministic across identical seeds"
+assert k1 == k2, (k1, k2)
+# every yielded frame is clean: poisoned ticks are suppressed, one per
+# recorded poison verdict, all on the targeted tenant
+assert all(h == (0, 0, 0) for _, h, _ in t1), "a poisoned frame was served"
+n_stream1 = sum(1 for sid, _, _ in t1 if sid == 1)
+assert k1.get("poison", 0) >= 1 and n_stream1 == 4 - k1["poison"]
+print("chaos smoke OK:", len(t1), "results,", k1)
+PY
+
 echo "smoke OK"

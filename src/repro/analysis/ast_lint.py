@@ -27,6 +27,12 @@ checks what reviewers keep having to say in words:
            module-level public function taking a stream bundle
            (``streams``/``frame_streams``/``stream_iters``/``iterables``)
            next to ``params`` or an ``engine``.
+  ESSR207  no broad exception swallowing in ``runtime/`` / ``api/`` — a
+           bare ``except``, ``except Exception`` or ``except BaseException``
+           there must re-raise or record what it caught (a call whose name
+           mentions record/warn/retire/quarantine/degrade/note_/fail);
+           a silent handler in the serving path hides exactly the faults
+           the resilience ledger (`runtime.guard`) exists to surface.
 
 A "traced body" is resolved statically, at function granularity: a function
 is traced when it is jit/pallas/shard_map-decorated, or its name is passed
@@ -69,6 +75,14 @@ TRACED_BODY_SCOPE = ("src/repro/core/", "src/repro/kernels/")
 
 #: The one package allowed to define free-function inference entry points.
 ENTRY_POINT_EXEMPT = ("src/repro/api/",)
+
+#: Directory scope for the swallowed-exception rule (ESSR207): the serving
+#: runtime and the facade, where every fault must land on the guard ledger.
+RESILIENCE_SCOPE = ("src/repro/runtime/", "src/repro/api/")
+
+#: Call-name tokens that count as recording/handling a caught exception.
+_RECOVERY_CALL = re.compile(
+    r"(record|warn|retire|quarantine|degrad|note_|fail)", re.IGNORECASE)
 
 
 def _suppressions(source: str) -> Dict[int, Set[str]]:
@@ -182,6 +196,42 @@ def _lint_entry_points(tree: ast.Module, relpath: str
                 f"(stream()/serve_streams())")
 
 
+def _lint_swallowed_exceptions(tree: ast.Module, relpath: str
+                               ) -> Iterable[Violation]:
+    """ESSR207 — a broad except handler in the serving path must either
+    re-raise or make a call that records the fault. Narrow handlers
+    (``except StopIteration``, ``except OSError``) are out of scope: the
+    rule targets catch-alls that can swallow injected faults whole."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = (node.type is None or
+                 bool(_name_tokens(node.type)
+                      & {"Exception", "BaseException"}))
+        if not broad:
+            continue
+        recovered = False
+        for stmt in node.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Raise):
+                    recovered = True
+                elif (isinstance(sub, ast.Call)
+                      and any(_RECOVERY_CALL.search(n)
+                              for n in _name_tokens(sub.func))):
+                    recovered = True
+            if recovered:
+                break
+        if not recovered:
+            caught = (ast.unparse(node.type) if node.type is not None
+                      else "<bare>")
+            yield Violation(
+                "ESSR207", f"{relpath}:{node.lineno}",
+                f"broad 'except {caught}' swallows the fault without "
+                f"re-raising or recording it — serving-path handlers must "
+                f"put what they caught on the resilience ledger "
+                f"(guard.record / warnings.warn / ...)")
+
+
 def _dataclass_flags(node: ast.ClassDef) -> Optional[Dict[str, bool]]:
     """None when not a dataclass; else {'frozen': ..., 'identity_eq': ...}."""
     for dec in node.decorator_list:
@@ -240,6 +290,8 @@ def lint_source(source: str, relpath: str) -> List[Violation]:
     if relpath.startswith(TRACED_BODY_SCOPE):
         for name, fn in _iter_traced_bodies(tree):
             found.extend(_lint_traced_body(name, fn, relpath))
+    if relpath.startswith(RESILIENCE_SCOPE):
+        found.extend(_lint_swallowed_exceptions(tree, relpath))
     found.extend(_lint_frozen_fields(tree, relpath))
     return [v for v in found
             if not _is_suppressed(v.code, int(v.site.rsplit(":", 1)[1]),

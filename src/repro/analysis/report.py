@@ -40,6 +40,8 @@ RULE_REGISTRY: Dict[str, Tuple[str, str]] = {
                        "dataclass"),
     "ESSR206": ("ast", "free-function stream-serving entry point outside "
                        "repro.api"),
+    "ESSR207": ("ast", "broad except handler in runtime//api/ swallows the "
+                       "fault without re-raising or recording it"),
     "ESSR301": ("range", "integer site interval exceeds its storage dtype "
                          "(or the what-if accumulator budget): overflow is "
                          "not provably absent"),

@@ -56,12 +56,15 @@ from repro.core.adaptive import (AdaptiveSwitcher, ShardSwitcherBank,
 from repro.core.edge_score import edge_score
 from repro.core.pipeline import (compiled_cache_occupancy,
                                  configure_compiled_caches,
-                                 edge_selective_sr, fused_frame_fn,
-                                 resolve_backend, snap_capacity,
+                                 edge_selective_sr, frame_health,
+                                 fused_frame_fn, resolve_backend,
+                                 sanitize_frame, snap_capacity,
                                  sr_all_patches_result, sr_whole)
 from repro.kernels.dispatch import resolve_interpret
 from repro.launch.mesh import make_patch_mesh
 from repro.models.essr import ESSRConfig, init_essr
+from repro.runtime.guard import (FaultInjector, PoisonFrameError,
+                                 ResilienceGuard)
 
 #: Default location of the cached briefly-trained benchmark supernets
 #: (written by benchmarks/common.get_trained_essr).
@@ -106,6 +109,22 @@ class SREngine:
         # directory to cache the alphas in (from_checkpoint passes the
         # bench-model cache), only consulted for the default batch.
         self.qpack = self._resolve_quant_pack(calibrate, quant_cache)
+        # serving resilience (repro.runtime.guard): the sticky degradation
+        # ladder from this engine's configured serving point, plus the
+        # optional seeded fault harness (plan.faults). Engine state like the
+        # mesh — the ladder level survives across frames by design. The
+        # ladder is built from the RESOLVED interpret policy so the
+        # pallas->interpret rung only exists where compiled kernels actually
+        # run (on CPU the interpreter is already the resolved mode).
+        self.guard = ResilienceGuard(
+            backend=backend,
+            interpret=(resolve_interpret(self.plan.interpret)
+                       if backend == "pallas" else self.plan.interpret),
+            quant_on=self.plan.quant is not None, fusion=self.plan.fusion,
+            max_retries=self.plan.max_retries)
+        self.injector = (FaultInjector(self.plan.faults)
+                         if self.plan.faults is not None else None)
+        self._frame_idx = 0            # monotone launch index (fault coins)
         base_switching = (switching if switching is not None
                           else SwitchingConfig(t1=self.plan.t1, t2=self.plan.t2))
         self.switcher = AdaptiveSwitcher(base_switching)
@@ -219,6 +238,94 @@ class SREngine:
     def backend_label(self) -> str:
         return self._backend_label(self.plan)
 
+    def _variant_label(self, plan: ExecutionPlan, v) -> str:
+        """`_backend_label` for a degradation-ladder rung: labels what the
+        (possibly stepped-down) variant actually executes, so a frame served
+        at a degraded level can never masquerade as the planned one."""
+        base = v.backend
+        if v.backend == "pallas" and resolve_interpret(v.interpret):
+            base = "pallas-interpret"
+        return (base if (plan.quant is None or not v.quant)
+                else f"{base}-{plan.quant}")
+
+    # -- serving resilience (plan.on_poison / plan.faults) -------------------
+
+    def _next_index(self) -> int:
+        """Monotone launch index — the deterministic coordinate fault coins
+        and degradation events key on."""
+        i = self._frame_idx
+        self._frame_idx += 1
+        return i
+
+    def _ingest_frame(self, frame, p: ExecutionPlan, index: int):
+        """Host-side dtype gate on every entry path. Wrong-dtype frames are
+        the one poison class the traced graph cannot express (the executable
+        is typed), so they resolve here: "raise" rejects, every other policy
+        normalizes integer payloads by their dtype range (uint8 -> /255, so
+        the content recovers instead of serving garbage)."""
+        if not isinstance(frame, (jax.Array, np.ndarray)):
+            frame = jnp.asarray(frame)
+        if jnp.issubdtype(frame.dtype, jnp.floating):
+            return jnp.asarray(frame)
+        if p.on_poison == "raise":
+            self.guard.record(index, "poison",
+                              f"non-float frame dtype {frame.dtype}")
+            raise PoisonFrameError(
+                f"frame dtype {frame.dtype} is not floating point "
+                f"(plan.on_poison='raise')")
+        if p.on_poison != "off":
+            self.guard.record(index, "poison",
+                              f"non-float frame dtype {frame.dtype} "
+                              f"normalized to float32")
+        try:
+            span = float(np.iinfo(np.dtype(str(frame.dtype))).max)
+        except ValueError:
+            span = 1.0
+        return jnp.asarray(frame).astype(jnp.float32) / max(span, 1.0)
+
+    def _host_health(self, frame, p: ExecutionPlan, index: int):
+        """Health verdict + on_poison policy for the host-dispatch paths
+        (they already sync per frame, so the jitted reduce costs nothing;
+        fused dispatch computes the same verdict in-graph instead).
+        Returns (frame, health tuple or None, route-to-bilinear flag)."""
+        if p.on_poison == "off":
+            return frame, None, False
+        health_t = tuple(int(c) for c in np.asarray(frame_health(frame)))
+        if not any(health_t):
+            return frame, health_t, False
+        self.guard.record(index, "poison",
+                          f"frame health nan/inf/oob={health_t} "
+                          f"(policy {p.on_poison})")
+        if p.on_poison == "raise":
+            raise PoisonFrameError(
+                f"frame failed health verdict nan/inf/oob={health_t} "
+                f"(plan.on_poison='raise')", health=health_t)
+        return sanitize_frame(frame), health_t, p.on_poison == "bilinear"
+
+    def _guarded_frames(self, frames: Iterable, stream_id: int = 0,
+                        ) -> Iterator:
+        """Iterate a tenant stream under the fault harness: ``plan.faults``
+        wraps the iterator with seeded poison/error injection, and an
+        iterator that raises ends the stream with a recorded retirement
+        instead of killing the serving loop (the solo-stream analog of the
+        multiplexer's per-tenant quarantine)."""
+        it = iter(frames)
+        if self.injector is not None:
+            it = self.injector.wrap_stream(stream_id, it)
+        n = 0
+        while True:
+            try:
+                frame = next(it)
+            except StopIteration:
+                return
+            except Exception as e:
+                self.guard.record(n, "retire",
+                                  f"stream {stream_id} iterator raised: "
+                                  f"{e!r}")
+                return
+            yield frame
+            n += 1
+
     # -- fused dispatch (plan.dispatch == "fused") ---------------------------
 
     def _mark_warm(self, key) -> bool:
@@ -279,6 +386,10 @@ class SREngine:
         caps = self._fused_caps.get(key)
         if caps is None:
             t1, t2 = thresholds
+            if p.on_poison != "off":
+                # probe on the sanitized frame: a poisoned first frame must
+                # not seed a garbage capacity profile for its whole geometry
+                frame = sanitize_frame(frame)
             scores = np.asarray(edge_score(geom.extract(frame)))
             counts = sp.subnet_counts(sp.decide(scores, t1, t2))
             caps = self._snap_profile(counts, geom, p)
@@ -316,17 +427,33 @@ class SREngine:
         later; host work here is bounded (geometry/caps lookups + the async
         dispatch), so frame N+1's ingest overlaps frame N's compute."""
         t0 = time.perf_counter()
+        index = self._next_index()
+        frame = self._ingest_frame(frame, p, index)
         geom = p.geometry(frame.shape[0], frame.shape[1], self.cfg.scale)
         caps = self._fused_caps_for(geom, p, frame, thresholds, streaming)
-        fn = fused_frame_fn(geom, caps, self.cfg, self.backend, p.interpret,
-                            self.mesh, self.qpack, p.fusion)
-        compiled = self._mark_warm(("fused", geom.cache_key, caps,
-                                    p.interpret, p.fusion))
+        if self.injector is not None:
+            self.injector.maybe_delay(index)
         t1, t2 = thresholds
-        outs = fn(self.params, frame, t1, t2)
+
+        def attempt(v):
+            if self.injector is not None:
+                self.injector.maybe_fail_launch(index)
+            fn = fused_frame_fn(geom, caps, self.cfg, v.backend, v.interpret,
+                                self.mesh, self.qpack if v.quant else None,
+                                v.fusion, p.on_poison)
+            return fn(self.params, frame, t1, t2)
+
+        # the degradation ladder owns retries: a failed launch (injected or
+        # genuine) steps down fusion -> interpret -> ref -> fp32 and re-runs
+        outs, steps = self.guard.run(attempt, index)
+        v = self.guard.variant
+        compiled = self._mark_warm(("fused", geom.cache_key, caps,
+                                    v.backend, v.interpret, v.quant,
+                                    v.fusion, p.on_poison))
         return {"outs": outs, "geom": geom, "caps": caps, "t0": t0,
                 "plan": p, "thresholds": (t1, t2), "compiled": compiled,
-                "streaming": streaming}
+                "streaming": streaming, "variant": v, "steps": steps,
+                "index": index}
 
     def _finalize_fused(self, rec: dict) -> FrameResult:
         """Block on one in-flight fused frame, materialize its routing
@@ -334,7 +461,7 @@ class SREngine:
         that fused dispatch deferred: Algorithm-1 threshold trim from the
         (possibly one-frame-old) counts, straggler demotion on a missed
         deadline, and capacity growth after spill."""
-        img, ids, scores, counts, spills = rec["outs"]
+        img, ids, scores, counts, spills, health = rec["outs"]
         img.block_until_ready()
         done = time.perf_counter()
         # marginal frame time: under async streaming a frame's launch-to-
@@ -348,6 +475,24 @@ class SREngine:
         dt = done - max(rec["t0"], self._fused_last_done)
         self._fused_last_done = done
         p, geom, streaming = rec["plan"], rec["geom"], rec["streaming"]
+        # materialize the in-graph health verdict (counts sync here anyway)
+        # and apply the host-visible side of the on_poison policy
+        health_t = None
+        if p.on_poison != "off":
+            health_t = tuple(int(c) for c in np.asarray(health))
+            if any(health_t):
+                self.guard.record(rec["index"], "poison",
+                                  f"frame health nan/inf/oob={health_t} "
+                                  f"(policy {p.on_poison})")
+                if p.on_poison == "raise":
+                    raise PoisonFrameError(
+                        f"frame failed health verdict "
+                        f"nan/inf/oob={health_t} (plan.on_poison='raise')",
+                        health=health_t)
+        steps = rec["steps"]
+        if streaming and p.watchdog_s is not None and dt > p.watchdog_s:
+            steps = steps + self.guard.note_watchdog(rec["index"], dt,
+                                                     p.watchdog_s)
         counts_t = tuple(int(c) for c in np.asarray(counts))
         spills_t = tuple(int(s) for s in np.asarray(spills))
         macs = (self._macs if p.patch == self.plan.patch
@@ -375,12 +520,13 @@ class SREngine:
         # — consumers that index it (np.asarray) pay the copy, the
         # steady-state stream does not
         out = FrameResult(image=img, mode="edge_select",
-                          backend=self._backend_label(p), ids=ids,
-                          scores=scores, counts=counts_t,
+                          backend=self._variant_label(p, rec["variant"]),
+                          ids=ids, scores=scores, counts=counts_t,
                           mac_saving=saving, latency_s=dt, thresholds=live,
                           deadline_missed=missed, shards=self.plan.shards,
                           shard_counts=shard_counts, dispatch="fused",
-                          spill_counts=spills_t, compiled=rec["compiled"])
+                          spill_counts=spills_t, compiled=rec["compiled"],
+                          health=health_t, degraded=steps)
         if streaming:
             self.stats.append(dataclasses.replace(out, image=None,
                                                   ids=None, scores=None))
@@ -472,23 +618,34 @@ class SREngine:
             template = {"params": params, "ema": params}
             try:
                 top = set(json.loads(cm.read_manifest()["tree_template"]))
-            except Exception:
+            except Exception as e:
                 top = None                       # legacy/unreadable manifest
+                warnings.warn(f"checkpoint manifest unreadable for "
+                              f"{ckpt_dir} ({e!r}); restoring with the "
+                              f"default template")
             if top is not None and top and top <= {"params", "ema"}:
                 template = {k: params for k in top}
-            restored, _ = cm.restore(template)
-            use = prefer
-            if use not in restored:
-                # fall back to whatever tree the checkpoint does hold
-                # ("params" when present, else e.g. an ema-only checkpoint)
-                use = ("params" if "params" in restored
-                       else next(iter(sorted(restored))))
-                warnings.warn(
-                    f"checkpoint {ckpt_dir} has no {prefer!r} tree "
-                    f"(found {sorted(restored)}); serving {use!r} instead")
-            params = restored[use]
-            if verbose:
-                print(f"(restored {use!r} weights from {ckpt_dir})")
+            try:
+                restored, _ = cm.restore(template)
+            except Exception as e:
+                # truncated/corrupted payload: degrade to fresh init rather
+                # than dying mid-construction (demos and serving stay up)
+                restored = None
+                warnings.warn(f"checkpoint restore failed for {ckpt_dir}: "
+                              f"{e!r}; serving fresh random init")
+            if restored is not None:
+                use = prefer
+                if use not in restored:
+                    # fall back to whatever tree the checkpoint does hold
+                    # ("params" when present, else e.g. an ema-only one)
+                    use = ("params" if "params" in restored
+                           else next(iter(sorted(restored))))
+                    warnings.warn(
+                        f"checkpoint {ckpt_dir} has no {prefer!r} tree "
+                        f"(found {sorted(restored)}); serving {use!r} instead")
+                params = restored[use]
+                if verbose:
+                    print(f"(restored {use!r} weights from {ckpt_dir})")
         elif bench_cache:
             pattern = os.path.join(bench_cache, f"essr_x{cfg.scale}_sfb{cfg.n_sfb}_*")
 
@@ -561,6 +718,13 @@ class SREngine:
             # the host and says so in FrameResult.dispatch
             return self._upscale_fused(frame, p)
         t0 = time.perf_counter()
+        index = self._next_index()
+        frame = self._ingest_frame(frame, p, index)
+        # host dispatch syncs per frame anyway, so the verdict runs eagerly;
+        # under "bilinear" a poisoned threshold-routed frame is forced to the
+        # dense fallback lane below (forced-width modes serve the sanitized
+        # frame through the requested subnet — the caller pinned the route)
+        frame, health_t, force_bilinear = self._host_health(frame, p, index)
 
         widths = self.cfg.subnet_widths()
         if mode == "whole":
@@ -574,7 +738,7 @@ class SREngine:
             # sr_whole always runs the pure-JAX path; label it honestly
             return FrameResult(image=img, mode=mode, backend="ref",
                                latency_s=time.perf_counter() - t0,
-                               compiled=compiled)
+                               compiled=compiled, health=health_t)
 
         # cached gather/scatter maps for this frame shape (zero host setup
         # after the first frame of a given geometry)
@@ -610,6 +774,10 @@ class SREngine:
                                         mesh=self.mesh, quant=self.qpack,
                                         fusion=p.fusion)
         else:
+            if force_bilinear and ids_override is None:
+                # poisoned frame under on_poison="bilinear": the dense
+                # fallback lane serves every patch (sanitized above)
+                ids_override = np.zeros(geom.n, np.int64)
             # an explicit ids_override skips the edge unit entirely, so there
             # are no scores to report for that path
             scored = ids_override is None
@@ -633,7 +801,8 @@ class SREngine:
                                        else (0.0, 0.0)),
                            # sharding is engine-level (like backend): a
                            # per-call plan cannot rebuild the mesh
-                           shards=self.plan.shards, compiled=compiled)
+                           shards=self.plan.shards, compiled=compiled,
+                           health=health_t)
 
     def reference(self, frame: jax.Array, width: Optional[int] = None) -> FrameResult:
         """Whole-image convolution — the lossless reference of Table III."""
@@ -671,14 +840,22 @@ class SREngine:
             return self._finalize_fused(self._launch_fused(
                 frame, self.plan, self.switcher.thresholds, streaming=True))
         t0 = time.perf_counter()
+        index = self._next_index()
+        frame = self._ingest_frame(frame, self.plan, index)
+        frame, health_t, force_bilinear = self._host_health(frame, self.plan,
+                                                            index)
         geom = self.plan.geometry(frame.shape[0], frame.shape[1],
                                   self.cfg.scale)
         compiled = self._mark_warm(("host", geom.cache_key))
         patches, pos = geom.extract(frame), geom.pos
         scores = np.asarray(edge_score(patches))
         sharded = self.bank is not None
-        if sharded:
-            slices = geom.shard_slices(self.plan.shards)
+        slices = (geom.shard_slices(self.plan.shards) if sharded else None)
+        if force_bilinear:
+            # poisoned frame under on_poison="bilinear": serve the dense
+            # fallback lane; the switcher still observes (zero C54 load)
+            ids = np.zeros(len(scores), np.int64)
+        elif sharded:
             ids = self.bank.assign(scores, slices)
         else:
             ids = self.switcher.assign(scores)
@@ -715,7 +892,7 @@ class SREngine:
                           shard_counts=shard_counts,
                           shard_thresholds=shard_thresholds,
                           shard_deadline_missed=shard_missed,
-                          compiled=compiled)
+                          compiled=compiled, health=health_t)
         # retain only the compact record: holding every SR image would grow
         # unboundedly over a long stream (one 8K frame is ~100s of MB)
         self.stats.append(dataclasses.replace(out, image=None,
@@ -737,6 +914,9 @@ class SREngine:
             raise ValueError(
                 f"plan.streams={self.plan.streams}: multi-stream serving "
                 f"admits one frame per tenant per tick — use serve_streams()")
+        # fault harness + iterator isolation: an iterator that raises ends
+        # the stream with a recorded retirement, never a serving-loop crash
+        frames = self._guarded_frames(frames)
         if self.plan.dispatch == "fused" and self.plan.inflight > 1:
             yield from self._stream_fused_async(frames)
             return
@@ -802,4 +982,10 @@ class SREngine:
             # bounded-cache work): nonzero evictions under a steady geometry
             # set means executables are silently re-tracing.
             s["compiled_caches"] = compiled_cache_occupancy()
+        if self.guard.events:
+            # the resilience ledger: every degradation-ladder step, poison
+            # verdict, quarantine/retire and watchdog event, deterministic
+            # under a seeded FaultPlan (watchdog events are timing-dependent
+            # and excluded from determinism assertions)
+            s["degradations"] = self.guard.summary()
         return s

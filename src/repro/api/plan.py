@@ -27,8 +27,9 @@ import numpy as np
 
 from repro.core import subnet_policy as sp
 from repro.core.patching import PatchGeometry, get_geometry
-from repro.core.pipeline import DEFAULT_BUCKETS, FUSION_MODES
+from repro.core.pipeline import DEFAULT_BUCKETS, FUSION_MODES, HEALTH_POLICIES
 from repro.quant.pams import QUANT_MODES as pams_quant_modes
+from repro.runtime.guard import FaultPlan
 
 #: Subnet-policy names accepted by :class:`ExecutionPlan`.
 #: ``threshold``     — paper Sec. II-C routing on the (t1, t2) edge thresholds
@@ -100,6 +101,15 @@ _FIELD_RULES: Dict[str, Tuple[Callable, str]] = {
     "stream_shares": (lambda v: v is None or (bool(v)
                       and all(s > 0 and np.isfinite(s) for s in v)),
                       "None or a tuple of finite floats > 0"),
+    "on_poison": (lambda v: v in HEALTH_POLICIES, f"one of {HEALTH_POLICIES}"),
+    "faults": (lambda v: v is None or isinstance(v, FaultPlan),
+               "None or a repro.runtime.guard.FaultPlan"),
+    "max_retries": (lambda v: _is_int(v) and v >= 0, "an int >= 0"),
+    "quarantine_ticks": (lambda v: _is_int(v) and v >= 0,
+                         "an int >= 0 (0 retires a quarantined stream "
+                         "permanently)"),
+    "watchdog_s": (lambda v: v is None or (_is_num(v) and v > 0),
+                   "None or a number > 0"),
 }
 
 #: Cross-field constraints: (field to blame, predicate over the whole plan,
@@ -128,6 +138,11 @@ _CROSS_RULES: Tuple[Tuple[str, Callable, Callable], ...] = (
     ("stream_shares", lambda p: (p.stream_shares is None
                                  or len(p.stream_shares) == p.streams),
      lambda p: f"None or a tuple of exactly streams={p.streams} shares"),
+    # the watchdog meters fused admission ticks / frame launches; host
+    # dispatch has no tick clock to meter
+    ("watchdog_s", lambda p: p.watchdog_s is None or p.dispatch == "fused",
+     lambda p: "None unless dispatch='fused' (the watchdog meters fused "
+               "admission ticks)"),
 )
 
 
@@ -213,6 +228,37 @@ class ExecutionPlan:
     #: share raster-deterministically in this proportion — frames are never
     #: dropped.
     stream_shares: Optional[Tuple[float, ...]] = None
+    #: Poison-frame policy (`core.pipeline.HEALTH_POLICIES`): what serving
+    #: does about a frame with NaN/Inf/out-of-[0,1] pixels. "raise" (default)
+    #: raises `PoisonFrameError` (multi-tenant serving quarantines the
+    #: offending stream instead — see ``quarantine_ticks``); "sanitize"
+    #: clamps in-graph (bit-identical on clean frames); "bilinear" routes the
+    #: poisoned frame to the dense fallback lane; "off" disables the health
+    #: verdict entirely (`FrameResult.health` is None — the unguarded
+    #: baseline `bench_gate.py` measures overhead against).
+    on_poison: str = "raise"
+    #: Optional seeded chaos schedule (`repro.runtime.guard.FaultPlan`):
+    #: injects poison pixels, tenant-iterator errors, simulated backend
+    #: failures and launch delays deterministically. None = no injection
+    #: (production). Fault handling itself (the degradation ladder, the
+    #: quarantine loop) is always on.
+    faults: Optional[FaultPlan] = None
+    #: Extra launch attempts the degradation ladder may spend per frame/tick
+    #: (`runtime.guard.ResilienceGuard`): on a failed launch the engine steps
+    #: down (fusion group->layer, backend pallas->interpret->ref, quant
+    #: ->fp32; sticky) or retries at the ref/fp32/layer floor, at most this
+    #: many times, then re-raises.
+    max_retries: int = 2
+    #: Multi-tenant poison quarantine (`SREngine.serve_streams` under
+    #: on_poison="raise"): a poisoned stream stops being admitted for this
+    #: many ticks, then re-admits; 0 retires it permanently. Iterator errors
+    #: always retire permanently (a raised iterator cannot resume).
+    quarantine_ticks: int = 0
+    #: Optional wall-clock budget (seconds) per fused frame launch/admission
+    #: tick: a slower tick steps the degradation ladder down one rung
+    #: (recorded as a "watchdog" event; timing-dependent, so excluded from
+    #: determinism assertions). None = no watchdog.
+    watchdog_s: Optional[float] = None
 
     def __post_init__(self):
         # -- normalization (keeps the frozen/hashable contract when callers

@@ -70,6 +70,15 @@ class FrameResult:
     # the live streams of a tick are served concurrently, so per-stream fps
     # is 1/latency_s and aggregate fps is live_streams/latency_s.
     stream_id: Optional[int] = None
+    # -- serving resilience (plan.on_poison / runtime.guard) -----------------
+    # (nan, inf, out-of-[0,1]) pixel counts of the RAW input frame — the
+    # in-graph health verdict under fused dispatch, a jitted reduce under
+    # host dispatch. None when plan.on_poison == "off" (verdicts disabled).
+    health: Optional[Tuple[int, int, int]] = None
+    # degradation-ladder steps newly applied while serving THIS frame/tick
+    # (e.g. "backend:->ref"); earlier frames' sticky steps do not reappear.
+    # The full ledger lives in SREngine.summary()["degradations"].
+    degraded: Tuple[str, ...] = ()
 
     @property
     def n_patches(self) -> int:
@@ -98,6 +107,10 @@ class FrameResult:
             out["stream_id"] = int(self.stream_id)
         if self.shards > 1:
             out["shards"] = int(self.shards)
+        if self.health is not None:
+            out["health"] = tuple(int(c) for c in self.health)
+        if self.degraded:
+            out["degraded"] = tuple(self.degraded)
         return out
 
 
@@ -133,6 +146,9 @@ def summarize_stats(stats) -> dict:
               if getattr(s, "spill_counts", None) is not None]
     if spills:
         out["spilled_patches"] = np.asarray(spills).sum(0).tolist()
+    poisoned = sum(1 for s in stats if any(getattr(s, "health", None) or ()))
+    if poisoned:
+        out["poison_frames"] = poisoned
     shards = max((getattr(s, "shards", 1) or 1) for s in stats)
     if shards > 1:
         out["shards"] = shards

@@ -255,6 +255,59 @@ def sharded_forward(params, patches: jax.Array, cfg: ESSRConfig, width: int,
 # never recompiles the frame.
 # ---------------------------------------------------------------------------
 
+#: ``ExecutionPlan.on_poison`` — what serving does about a frame that fails
+#: its health verdict (any NaN/Inf/out-of-[0,1] pixel):
+#:   "off"      — verdicts not computed (the unguarded baseline; FrameResult
+#:                .health is None);
+#:   "raise"    — verdict computed in-graph, `PoisonFrameError` raised at
+#:                materialize time (multi-tenant serving quarantines the
+#:                stream instead — the per-tenant analog of raising);
+#:   "sanitize" — nan_to_num + clamp to [0,1] in-graph before routing.
+#:                Bit-identical on clean in-range frames;
+#:   "bilinear" — sanitize, then force the poisoned frame's patches to the
+#:                dense bilinear floor lane (subnet 0) in-graph.
+#: All variants are branch-free in the traced graph — the verdict is three
+#: int32 reduces riding the existing outputs, no host sync (ESSR1xx-clean).
+HEALTH_POLICIES = ("off", "raise", "sanitize", "bilinear")
+
+
+def _health_counts(frame: jax.Array) -> jax.Array:
+    """(nan, inf, out-of-[0,1]) pixel counts of one frame — int32 (3,)."""
+    nan = jnp.sum(jnp.isnan(frame))
+    inf = jnp.sum(jnp.isinf(frame))
+    oob = jnp.sum(jnp.isfinite(frame) & ((frame < 0.0) | (frame > 1.0)))
+    return jnp.stack([nan, inf, oob]).astype(jnp.int32)
+
+
+def _sanitize(frame: jax.Array) -> jax.Array:
+    """nan->0, +/-inf->1/0, clamp to [0,1]. Identity (bit-exact) on clean
+    in-range frames — the sanitize/bilinear policies apply it unconditionally
+    so the traced graph stays branch-free."""
+    return jnp.clip(jnp.nan_to_num(frame, nan=0.0, posinf=1.0, neginf=0.0),
+                    0.0, 1.0)
+
+
+@functools.lru_cache(maxsize=1)
+def _health_jit():
+    return jax.jit(_health_counts)
+
+
+@functools.lru_cache(maxsize=1)
+def _sanitize_jit():
+    return jax.jit(_sanitize)
+
+
+def frame_health(frame: jax.Array) -> jax.Array:
+    """Jitted health verdict for the host-dispatch paths (which already sync
+    per frame; the fused paths compute the same counts in-graph instead)."""
+    return _health_jit()(frame)
+
+
+def sanitize_frame(frame: jax.Array) -> jax.Array:
+    """Jitted sanitize for the host-dispatch paths."""
+    return _sanitize_jit()(frame)
+
+
 def snap_capacity(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
                   n_total: Optional[int] = None) -> int:
     """Desired slot count -> capacity: 0 stays 0 (the subnet lane is elided
@@ -328,19 +381,26 @@ def capacity_combine(out_patches: jax.Array, sr_slots: jax.Array,
 def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
                    cfg: ESSRConfig, backend: str,
                    interpret: Optional[bool], mesh, quant,
-                   fusion: str = "layer"):
+                   fusion: str = "layer", on_poison: str = "raise"):
     """The compiled frame executable: one per (geometry, capacity profile,
-    backend, interpret, mesh, quant, fusion). Signature of the returned
-    callable:
+    backend, interpret, mesh, quant, fusion, on_poison). Signature of the
+    returned callable:
 
-        (params, frame, t1, t2) -> (image, eff_ids, scores, counts, spills)
+        (params, frame, t1, t2)
+            -> (image, eff_ids, scores, counts, spills, health)
 
     ``t1``/``t2`` are traced (threshold adaptation never recompiles); every
-    other knob is static. All five outputs are device arrays — callers
+    other knob is static. All six outputs are device arrays — callers
     materialize them lazily (the async stream reads routing telemetry one
-    frame behind)."""
+    frame behind). ``health`` is the (nan, inf, oob) int32 verdict of the
+    *raw* input frame (all zeros under ``on_poison="off"``, where the checks
+    are elided); the ``on_poison`` policy (see `HEALTH_POLICIES`) is applied
+    in-graph, branch-free, with no host sync."""
     from repro.models.layers import bilinear_resize
 
+    if on_poison not in HEALTH_POLICIES:
+        raise ValueError(f"unknown on_poison {on_poison!r}; choose from "
+                         f"{HEALTH_POLICIES}")
     base_forward = resolve_forward(backend, quant, fusion)
     if mesh is not None and int(mesh.size) > 1:
         def forward(params, patches, cfg, width, interpret=None):
@@ -355,9 +415,20 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
                          f"subnet width {widths}")
 
     def run(params, frame, t1, t2):
+        if on_poison == "off":
+            health = jnp.zeros((3,), jnp.int32)
+        else:
+            health = _health_counts(frame)
+            if on_poison in ("sanitize", "bilinear"):
+                frame = _sanitize(frame)
         patches = geometry.extract(frame)
         scores = edge_score(patches)
         eff, spills = capacity_route(sp.decide(scores, t1, t2), caps)
+        if on_poison == "bilinear":
+            # poisoned frame -> dense fallback lane: every patch serves from
+            # the bilinear floor (branch-free demotion; the conv lanes still
+            # run on their now-empty slots, keeping the graph shape-static)
+            eff = jnp.where(jnp.any(health > 0), jnp.zeros_like(eff), eff)
         # subnet 0 is the dense floor: bilinear for every patch (it is the
         # spill target of last resort and costs no conv — the ASIC's router
         # bypass), overwritten wherever a conv subnet owns the patch
@@ -370,7 +441,7 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
             out = capacity_combine(out, sr, slot, member)
         counts = jnp.stack([jnp.sum(eff == k).astype(jnp.int32)
                             for k in range(len(widths))])
-        return geometry.fuse_average(out), eff, scores, counts, spills
+        return geometry.fuse_average(out), eff, scores, counts, spills, health
 
     return jax.jit(run)
 
@@ -379,13 +450,20 @@ def fused_frame_fn(geometry: PatchGeometry, caps: Tuple[int, ...],
 def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
                           caps: Tuple[int, ...], cfg: ESSRConfig,
                           backend: str, interpret: Optional[bool],
-                          mesh, quant, fusion: str = "layer"):
+                          mesh, quant, fusion: str = "layer",
+                          on_poison: str = "raise"):
     """The compiled multi-tenant admission-tick executable: ``streams``
     same-geometry frames (one per live tenant stream) through ONE
     capacity-slotted dispatch. Signature of the returned callable:
 
         (params, frames, t1s, t2s, quotas)
-            -> (images, eff_ids, scores, counts, spills)
+            -> (images, eff_ids, scores, counts, spills, health)
+
+    ``health`` is the per-stream (S, 3) int32 (nan, inf, oob) verdict of the
+    raw input frames (zeros under ``on_poison="off"``); the policy (see
+    `HEALTH_POLICIES`) is applied per stream, in-graph and branch-free —
+    under "bilinear" only the poisoned streams' patches demote to the dense
+    floor, healthy tenants route normally.
 
     ``frames`` is (S, H, W, C); ``t1s``/``t2s``/``quotas`` are (S,) traced
     arrays — per-stream Algorithm-1 adaptation and share rebalancing never
@@ -421,6 +499,9 @@ def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
                          f"subnet width {widths}")
     if streams < 1:
         raise ValueError(f"streams must be >= 1, got {streams}")
+    if on_poison not in HEALTH_POLICIES:
+        raise ValueError(f"unknown on_poison {on_poison!r}; choose from "
+                         f"{HEALTH_POLICIES}")
     top = len(widths) - 1
     n = geometry.n
     # On CPU the aggregate pool's conv batch (streams x per-stream slots)
@@ -437,6 +518,12 @@ def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
                           and jax.default_backend() == "cpu") else 1)
 
     def run(params, frames, t1s, t2s, quotas):
+        if on_poison == "off":
+            health = jnp.zeros((streams, 3), jnp.int32)
+        else:
+            health = jax.vmap(_health_counts)(frames)       # (S, 3)
+            if on_poison in ("sanitize", "bilinear"):
+                frames = _sanitize(frames)
         patches = jax.vmap(geometry.extract)(frames)        # (S, N, p, p, C)
         flat = patches.reshape((streams * n,) + patches.shape[2:])
         scores = edge_score(flat)
@@ -450,6 +537,12 @@ def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
             pos = jnp.cumsum(member.astype(jnp.int32), axis=1) - 1
             over = member & (pos >= quotas[:, None])
             routed2 = jnp.where(over, top - 1, want2)
+        if on_poison == "bilinear":
+            # per-stream dense-fallback demotion: only the poisoned streams'
+            # patches drop to the bilinear floor, healthy tenants untouched
+            poisoned = jnp.any(health > 0, axis=1)          # (S,)
+            routed2 = jnp.where(poisoned[:, None],
+                                jnp.zeros_like(routed2), routed2)
         eff, _ = capacity_route(routed2.reshape(-1), caps)
         out = bilinear_resize(flat, cfg.scale)
         for k in range(1, len(widths)):
@@ -481,7 +574,7 @@ def fused_stream_frame_fn(geometry: PatchGeometry, streams: int,
             [jnp.zeros((streams,), jnp.int32)] +
             [jnp.sum((want2 >= k) & (eff2 < k), axis=1).astype(jnp.int32)
              for k in range(1, len(widths))], axis=1)
-        return images, eff, scores, counts, spills
+        return images, eff, scores, counts, spills, health
 
     return jax.jit(run)
 
@@ -492,13 +585,15 @@ def fused_frame_forward(params, frame, cfg: ESSRConfig, *,
                         t1: float = sp.DEFAULT_T1, t2: float = sp.DEFAULT_T2,
                         backend: str = "ref",
                         interpret: Optional[bool] = None,
-                        mesh=None, quant=None, fusion: str = "layer"):
+                        mesh=None, quant=None, fusion: str = "layer",
+                        on_poison: str = "raise"):
     """One frame through the fused single-dispatch graph (see
-    :func:`fused_frame_fn`). Returns the raw device-array five-tuple; the
-    engine wraps it into a `FrameResult` and owns capacity-profile policy."""
+    :func:`fused_frame_fn`). Returns the raw device-array six-tuple
+    (..., health); the engine wraps it into a `FrameResult` and owns
+    capacity-profile and on_poison policy."""
     return fused_frame_fn(geometry, tuple(int(c) for c in caps), cfg,
-                          backend, interpret, mesh, quant, fusion)(
-        params, frame, t1, t2)
+                          backend, interpret, mesh, quant, fusion,
+                          on_poison)(params, frame, t1, t2)
 
 
 # ---------------------------------------------------------------------------

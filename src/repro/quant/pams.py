@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -275,6 +276,15 @@ def params_fingerprint(params) -> str:
     return h.hexdigest()[:16]
 
 
+def _payload_checksum(payload: dict) -> str:
+    """Content checksum over the canonical (sorted-key, checksum-free) JSON
+    encoding — a truncated or bit-flipped cache file fails verification
+    instead of silently serving garbage scales."""
+    body = {k: v for k, v in payload.items() if k != "checksum"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()[:16]
+
+
 def save_quant_pack(path: str, pack: QuantPack, fingerprint: str) -> None:
     payload = {
         "mode": pack.mode, "bits": pack.bits,
@@ -283,17 +293,30 @@ def save_quant_pack(path: str, pack: QuantPack, fingerprint: str) -> None:
         "fingerprint": fingerprint,
         "scales": {str(w): dict(sites) for w, sites in pack.scales},
     }
+    payload["checksum"] = _payload_checksum(payload)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
 
 
 def load_quant_pack(path: str, fingerprint: str) -> Optional[QuantPack]:
-    """Load a cached pack; None when missing, unreadable, or calibrated for
-    different weights (the fingerprint mismatch case)."""
+    """Load a cached pack; None when missing, corrupted, or calibrated for
+    different weights. A missing file and a fingerprint mismatch are the
+    quiet recalibration cases — as is a pack from before checksums were
+    recorded; a file that EXISTS but is unparseable, fails its integrity
+    checksum, or breaks the schema warns before falling back — that
+    cache was damaged, not merely stale."""
     try:
         with open(path) as f:
-            d = json.load(f)
+            raw = f.read()
+    except OSError:
+        return None
+    try:
+        d = json.loads(raw)
+        if "checksum" not in d:
+            return None
+        if d["checksum"] != _payload_checksum(d):
+            raise ValueError("integrity checksum mismatch")
         if d.get("fingerprint") != fingerprint:
             return None
         scales = tuple((int(w), tuple(sorted(
@@ -304,5 +327,7 @@ def load_quant_pack(path: str, fingerprint: str) -> Optional[QuantPack]:
                          per_channel_weights=bool(d["per_channel_weights"]),
                          act_percentile=float(d["act_percentile"]),
                          scales=scales)
-    except (OSError, ValueError, KeyError, TypeError):
+    except (ValueError, KeyError, TypeError, AttributeError) as e:
+        warnings.warn(f"quant-pack cache {path} is corrupted ({e!r}); "
+                      f"ignoring it and recalibrating", stacklevel=2)
         return None

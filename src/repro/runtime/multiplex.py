@@ -23,13 +23,26 @@ in share proportion, raster-deterministically, and frames are never
 dropped. A missed tick deadline is attributed by share-weighted MAC cost:
 only the streams running past their entitlement are demoted, so one
 tenant's heavy content never lowers another tenant's quality.
+
+Fault isolation (per tenant): a stream whose iterator raises is RETIRED —
+the exception is recorded in the engine's degradation ledger and the tick
+proceeds for every other tenant. A stream whose frame fails its health
+verdict under ``plan.on_poison="raise"`` is QUARANTINED instead of raising
+(the per-tenant analog of the solo raise): its result for that tick is
+suppressed, admission pauses for ``plan.quarantine_ticks`` ticks (0 retires
+it permanently), then the stream re-admits. Healthy tenants' outputs are
+unperturbed either way — the fp32 conv forward is row-wise bit-identical
+across batch content, so with a pinned capacity profile a healthy stream's
+frames are bit-equal to a no-fault run (asserted in tests/test_guard.py).
+Launch failures step the engine's shared degradation ladder exactly like
+the solo fused path; ``plan.watchdog_s`` meters the tick wall clock.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Deque, Iterable, Iterator, List, Sequence, Tuple
+from typing import Deque, Dict, Iterable, Iterator, List, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -59,6 +72,9 @@ class StreamMultiplexer:
                              "replaced after construction?)")
         self.engine = engine
         self.bank = engine.stream_bank
+        # stream ids whose finalized tick failed the health verdict under
+        # on_poison="raise"; drained by serve() into quarantine bookkeeping
+        self._poisoned: List[int] = []
 
     # -- the admission loop --------------------------------------------------
 
@@ -70,12 +86,37 @@ class StreamMultiplexer:
         overlaps admission of tick T+1), at the cost of the per-stream
         controllers adapting from a tick-old frame — the same documented
         control delay as the single-stream async path, per tick instead of
-        per frame."""
-        iters = [iter(s) for s in streams]
+        per frame.
+
+        Per-tenant fault isolation happens here: an iterator exception
+        retires THAT stream (recorded in the engine's guard ledger) and the
+        tick proceeds for the rest; a poison verdict under
+        ``plan.on_poison="raise"`` quarantines the stream for
+        ``plan.quarantine_ticks`` ticks (0 = permanent retirement) and then
+        re-admits it. The loop keeps ticking while quarantined streams wait
+        even if no stream is currently admissible."""
+        eng = self.engine
+        p = eng.plan
+        iters = []
+        for s, src in enumerate(streams):
+            it = iter(src)
+            if eng.injector is not None:
+                it = eng.injector.wrap_stream(s, it)
+            iters.append(it)
         live: List[int] = list(range(len(iters)))
+        quarantined: Dict[int, int] = {}     # stream id -> re-admission tick
         pending: Deque[dict] = collections.deque()
-        inflight = self.engine.plan.inflight
-        while live:
+        inflight = p.inflight
+        tick = 0
+        while live or quarantined or pending:
+            self._drain_poisoned(live, quarantined, tick)
+            for s in sorted(sid for sid, t in quarantined.items()
+                            if tick >= t):
+                del quarantined[s]
+                live.append(s)
+                live.sort()
+                eng.guard.record(tick, "readmit",
+                                 f"stream {s} re-admitted after quarantine")
             frames, nxt = [], []
             for s in live:
                 try:
@@ -83,14 +124,53 @@ class StreamMultiplexer:
                     nxt.append(s)
                 except StopIteration:
                     pass
+                except Exception as e:
+                    # one tenant's iterator failure must not abort the tick:
+                    # retire that stream with the reason on the ledger and
+                    # keep serving everyone else
+                    eng.guard.record(tick, "retire",
+                                     f"stream {s} iterator raised: {e!r}")
             live = nxt
-            if not live:
-                break
-            pending.append(self._launch_tick(live, frames))
-            while len(pending) >= inflight:
+            if frames:
+                pending.append(self._launch_tick(live, frames))
+                while len(pending) >= inflight:
+                    yield from self._finalize_tick(pending.popleft())
+            elif pending:
+                # nothing admissible right now: drain a tick (its verdicts
+                # may quarantine or re-route streams) before advancing
                 yield from self._finalize_tick(pending.popleft())
+            elif not quarantined:
+                break
+            tick += 1
         while pending:
             yield from self._finalize_tick(pending.popleft())
+        self._drain_poisoned(live, quarantined, tick)
+
+    def _drain_poisoned(self, live: List[int], quarantined: Dict[int, int],
+                        tick: int) -> List[int]:
+        """Move streams flagged by finalized ticks out of admission: into
+        quarantine for ``plan.quarantine_ticks`` ticks, or permanent
+        retirement when that knob is 0."""
+        eng = self.engine
+        q = eng.plan.quarantine_ticks
+        moved = []
+        for s in self._poisoned:
+            if s in live:
+                live.remove(s)
+                moved.append(s)
+                if q > 0:
+                    quarantined[s] = tick + q
+                    eng.guard.record(
+                        tick, "quarantine",
+                        f"stream {s} quarantined for {q} tick(s) after "
+                        f"poison verdict")
+                else:
+                    eng.guard.record(
+                        tick, "retire",
+                        f"stream {s} retired after poison verdict "
+                        f"(quarantine_ticks=0)")
+        self._poisoned = []
+        return moved
 
     # -- one tick ------------------------------------------------------------
 
@@ -114,17 +194,30 @@ class StreamMultiplexer:
         thresholds = tuple(self.bank.switchers[s].thresholds for s in live)
         batch = jnp.stack(frames)
         caps = self._caps_for_tick(geom, p, batch, thresholds, quotas)
-        fn = fused_stream_frame_fn(geom, len(live), caps, eng.cfg,
-                                   eng.backend, p.interpret, eng.mesh,
-                                   eng.qpack, p.fusion)
-        compiled = eng._mark_warm(("mux", geom.cache_key, len(live), caps,
-                                   p.interpret, p.fusion))
         t1s = jnp.asarray([t[0] for t in thresholds], jnp.float32)
         t2s = jnp.asarray([t[1] for t in thresholds], jnp.float32)
-        outs = fn(eng.params, batch, t1s, t2s,
-                  jnp.asarray(quotas, jnp.int32))
+        quotas_t = jnp.asarray(quotas, jnp.int32)
+        index = eng._next_index()
+        if eng.injector is not None:
+            eng.injector.maybe_delay(index)
+
+        def attempt(v):
+            if eng.injector is not None:
+                eng.injector.maybe_fail_launch(index)
+            fn = fused_stream_frame_fn(geom, len(live), caps, eng.cfg,
+                                       v.backend, v.interpret, eng.mesh,
+                                       eng.qpack if v.quant else None,
+                                       v.fusion, p.on_poison)
+            return fn(eng.params, batch, t1s, t2s, quotas_t)
+
+        outs, steps = eng.guard.run(attempt, index)
+        v = eng.guard.variant
+        compiled = eng._mark_warm(("mux", geom.cache_key, len(live), caps,
+                                   v.backend, v.interpret, v.quant,
+                                   v.fusion, p.on_poison))
         return {"outs": outs, "geom": geom, "plan": p, "live": tuple(live),
-                "t0": t0, "compiled": compiled}
+                "t0": t0, "compiled": compiled, "variant": v,
+                "steps": steps, "index": index}
 
     def _caps_for_tick(self, geom, p, batch, thresholds, quotas
                        ) -> Tuple[int, ...]:
@@ -194,7 +287,7 @@ class StreamMultiplexer:
         the materialized counts, share-weighted overload attribution on a
         missed tick deadline, and aggregate capacity growth after spill."""
         eng = self.engine
-        images, eff, scores, counts, spills = rec["outs"]
+        images, eff, scores, counts, spills, health = rec["outs"]
         images.block_until_ready()
         done = time.perf_counter()
         # marginal tick time, same clock as the engine's fused stream: under
@@ -206,25 +299,53 @@ class StreamMultiplexer:
         n = geom.n
         counts_np = np.asarray(counts)           # (live, n_subnets)
         spills_np = np.asarray(spills)
+        health_np = (np.asarray(health) if p.on_poison != "off" else None)
+        steps = rec["steps"]
+        if p.watchdog_s is not None and dt > p.watchdog_s:
+            steps = steps + eng.guard.note_watchdog(rec["index"], dt,
+                                                    p.watchdog_s)
         self._grow(("mux", geom.cache_key, len(live)), p, geom, len(live),
                    counts_np.sum(0).tolist(), spills_np.sum(0).tolist())
         macs = (eng._macs if p.patch == eng.plan.patch
                 else sp.SubnetMacs.make(eng.cfg, p.patch))
+        # a poisoned frame under "raise" routes on garbage scores; keep its
+        # controller state frozen while it heads into quarantine
+        quarantining = set()
+        if health_np is not None and p.on_poison == "raise":
+            quarantining = {s for i, s in enumerate(live)
+                            if health_np[i].any()}
         # per-stream trim first (each controller sees its own frame), then
         # the shared-deadline attribution on top — the same order as the
         # solo streaming path (observe_frame, then straggler demotion)
         for i, s in enumerate(live):
-            self.bank.observe(s, int(counts_np[i][sp.C54]))
+            if s not in quarantining:
+                self.bank.observe(s, int(counts_np[i][sp.C54]))
         missed = bool(eng.deadline_s and dt > eng.deadline_s)
         costs = [float(macs.total(tuple(int(c) for c in counts_np[i])))
                  for i in range(len(live))]
         demoted = self.bank.note_tick(missed, costs, streams=live)
         results: List[FrameResult] = []
         for i, s in enumerate(live):
+            health_t = (tuple(int(x) for x in health_np[i])
+                        if health_np is not None else None)
+            poisoned = health_t is not None and any(health_t)
+            if poisoned:
+                eng.guard.record(
+                    rec["index"], "poison",
+                    f"stream {s} frame failed health verdict "
+                    f"(nan={health_t[0]}, inf={health_t[1]}, "
+                    f"oob={health_t[2]})")
+                if p.on_poison == "raise":
+                    # the per-tenant analog of the solo raise: suppress this
+                    # stream's output for the tick and hand it to serve()'s
+                    # quarantine bookkeeping; every other tenant's results
+                    # stand untouched
+                    self._poisoned.append(s)
+                    continue
             counts_t = tuple(int(c) for c in counts_np[i])
             out = FrameResult(
                 image=images[i], mode="edge_select",
-                backend=eng._backend_label(p),
+                backend=eng._variant_label(p, rec["variant"]),
                 # per-stream slices of the flat (stream-major) telemetry;
                 # kept as lazy device arrays like the solo fused path
                 ids=eff[i * n:(i + 1) * n],
@@ -236,7 +357,7 @@ class StreamMultiplexer:
                 dispatch="fused",
                 spill_counts=tuple(int(x) for x in spills_np[i]),
                 compiled=rec["compiled"], shards=eng.plan.shards,
-                stream_id=s)
+                stream_id=s, health=health_t, degraded=steps)
             eng.stats.append(dataclasses.replace(out, image=None,
                                                  ids=None, scores=None))
             results.append(out)

@@ -234,6 +234,86 @@ def test_essr205_mutable_frozen_field_detected():
     assert "Plan" in vs[0].message
 
 
+def test_essr207_swallowed_exception_detected():
+    src = textwrap.dedent("""
+        def tick(streams):
+            out = []
+            for s in streams:
+                try:
+                    out.append(next(s))
+                except Exception:
+                    pass
+            return out
+    """)
+    vs = lint_source(src, "src/repro/runtime/mux.py")
+    assert codes(vs) == {"ESSR207"}
+    assert "swallows" in vs[0].message
+    # bare except and BaseException are equally broad
+    assert "ESSR207" in codes(lint_source(
+        src.replace("except Exception:", "except:"),
+        "src/repro/runtime/mux.py"))
+    assert "ESSR207" in codes(lint_source(
+        src.replace("Exception", "BaseException"),
+        "src/repro/api/serve.py"))
+
+
+def test_essr207_recovery_and_scope():
+    recorded = textwrap.dedent("""
+        def tick(guard, streams):
+            for i, s in enumerate(streams):
+                try:
+                    next(s)
+                except Exception as e:
+                    guard.record(i, "retire", repr(e))
+    """)
+    assert lint_source(recorded, "src/repro/runtime/mux.py") == []
+    reraised = textwrap.dedent("""
+        def tick(s):
+            try:
+                return next(s)
+            except Exception:
+                raise RuntimeError("tick failed")
+    """)
+    assert lint_source(reraised, "src/repro/runtime/mux.py") == []
+    warned = textwrap.dedent("""
+        import warnings
+        def load(path):
+            try:
+                return open(path).read()
+            except Exception as e:
+                warnings.warn(f"unreadable: {e!r}")
+    """)
+    assert lint_source(warned, "src/repro/api/loader.py") == []
+    # narrow handlers are out of scope even when silent
+    narrow = textwrap.dedent("""
+        def tick(s):
+            try:
+                return next(s)
+            except StopIteration:
+                pass
+    """)
+    assert lint_source(narrow, "src/repro/runtime/mux.py") == []
+    # the rule only patrols the serving path
+    swallowing = textwrap.dedent("""
+        def probe(x):
+            try:
+                return x()
+            except Exception:
+                pass
+    """)
+    assert "ESSR207" not in codes(lint_source(
+        swallowing, "src/repro/core/util.py"))
+    # suppression marker works like every other ESSR2xx rule
+    waived = textwrap.dedent("""
+        def probe(x):
+            try:
+                return x()
+            except Exception:  # essr: allow[ESSR207]
+                pass
+    """)
+    assert lint_source(waived, "src/repro/runtime/probe.py") == []
+
+
 def test_traced_names_resolved_through_partial_and_pallas():
     src = textwrap.dedent("""
         import functools
@@ -279,7 +359,7 @@ def test_report_roundtrip_and_baseline_diff(tmp_path):
 
 
 def test_rule_catalog_covers_all_passes():
-    assert len(RULES) == 15
+    assert len(RULES) == 16
     assert {c[:5] for c in RULES} == {"ESSR1", "ESSR2", "ESSR3"}
     # the registry is the single source: the rendered docs rows and the
     # committed docs catalog both carry every code

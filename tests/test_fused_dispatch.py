@@ -340,7 +340,7 @@ def test_summary_excludes_warmup_frames():
 
 
 def test_direct_fused_frame_forward():
-    """The low-level entry: one call, five device arrays, equal to the
+    """The low-level entry: one call, six device arrays, equal to the
     host reference pipeline."""
     from repro.core.pipeline import edge_selective_sr
     from repro.models.essr import init_essr
@@ -349,10 +349,11 @@ def test_direct_fused_frame_forward():
     ref = edge_selective_sr(params, frame, CFG)
     g = get_geometry(128, 128, 32, 2, CFG.scale)
     caps = tuple(snap_capacity(c, n_total=g.n) for c in ref.counts)
-    img, ids, scores, counts, spills = fused_frame_forward(
+    img, ids, scores, counts, spills, health = fused_frame_forward(
         params, frame, CFG, geometry=g, caps=caps)
     np.testing.assert_array_equal(np.asarray(ids), ref.ids)
     np.testing.assert_array_equal(np.asarray(counts), list(ref.counts))
     assert not np.asarray(spills).any()
+    assert not np.asarray(health).any()        # golden frame is clean
     np.testing.assert_allclose(np.asarray(img), np.asarray(ref.image),
                                rtol=1e-5, atol=1e-5)
